@@ -1,0 +1,73 @@
+"""Shared benchmark harness utilities.
+
+Every benchmark module exposes ``run() -> list[BenchRow]`` and writes a
+markdown rendering of its table to ``benchmarks/results/<module>.md``
+plus raw JSON to ``benchmarks/results/<module>.json``; ``benchmarks.run``
+aggregates all modules and prints the ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Callable, Sequence
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+
+
+@dataclasses.dataclass
+class BenchRow:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):
+    """Return (result, us_per_call) - median of ``iters`` timed calls."""
+    result = None
+    for _ in range(warmup):
+        result = fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        result = fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return result, times[len(times) // 2] * 1e6
+
+
+def write_results(module_name: str, rows: Sequence[BenchRow],
+                  markdown: str, extra: dict | None = None) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "rows": [dataclasses.asdict(r) for r in rows],
+        "extra": extra or {},
+    }
+    (RESULTS_DIR / f"{module_name}.json").write_text(
+        json.dumps(payload, indent=2, default=float))
+    (RESULTS_DIR / f"{module_name}.md").write_text(markdown)
+
+
+def md_table(headers: Sequence[str], rows: Sequence[Sequence]) -> str:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out) + "\n"
+
+
+def fmt_k(tokens: float, std: float | None = None) -> str:
+    if std is None:
+        return f"{tokens / 1e3:,.1f} K"
+    return f"{tokens / 1e3:,.1f} ± {std / 1e3:.1f} K"
+
+
+def fmt_pct(x: float, std: float | None = None) -> str:
+    if std is None:
+        return f"{x * 100:.1f}%"
+    return f"{x * 100:.1f}% ± {std * 100:.1f}%"

@@ -1,0 +1,97 @@
+"""Kernel microbenchmarks (interpret-mode wall time is NOT a TPU number;
+the derived column carries the roofline-relevant arithmetic intensity,
+which is platform-independent and feeds SSPerf reasoning)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BenchRow, md_table, timed, write_results
+from repro.kernels import ref
+
+
+def _ai_attention(b, hq, hkv, l, d):
+    flops = 4 * b * hq * l * l * d  # qk^T + pv
+    bytes_ = 2 * (b * hq * l * d + 2 * b * hkv * l * d + b * hq * l * d)
+    return flops / bytes_
+
+
+def _ai_decode(b, hq, hkv, l, d):
+    flops = 4 * b * hq * l * d
+    bytes_ = 2 * (b * hq * d + 2 * b * hkv * l * d + b * hq * d)
+    return flops / bytes_
+
+
+def run() -> list[BenchRow]:
+    rows, table = [], []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+
+    # flash attention: prefill shape (bf16)
+    b, hq, hkv, l, d = 1, 8, 2, 1024, 128
+    q = jax.random.normal(ks[0], (b, hq, l, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, hkv, l, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, hkv, l, d), jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v))
+    _, us = timed(lambda: jax.block_until_ready(fn(q, k, v)))
+    ai = _ai_attention(b, hq, hkv, l, d)
+    table.append(["flash_attention (prefill 1k, bf16)", f"{us:,.0f}",
+                  f"{ai:,.0f} FLOP/B", "compute-bound (MXU)"])
+    rows.append(BenchRow("kernels/flash_attention", us,
+                         f"arith_intensity={ai:,.0f}flop/B"))
+
+    # decode attention: 32k cache
+    l = 32768
+    qd = jax.random.normal(ks[0], (1, hq, d), jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (1, hkv, l, d), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (1, hkv, l, d), jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: ref.decode_attention_ref(q, k, v))
+    _, us = timed(lambda: jax.block_until_ready(fn(qd, kc, vc)))
+    ai = _ai_decode(1, hq, hkv, l, d)
+    table.append(["decode_attention (32k cache, bf16)", f"{us:,.0f}",
+                  f"{ai:.1f} FLOP/B", "memory-bound (HBM stream)"])
+    rows.append(BenchRow("kernels/decode_attention", us,
+                         f"arith_intensity={ai:.1f}flop/B"))
+
+    # rmsnorm
+    x = jax.random.normal(ks[0], (4096, 4096), jnp.bfloat16)
+    w = jnp.ones((4096,), jnp.bfloat16)
+    fn = jax.jit(lambda x, w: ref.rmsnorm_ref(x, w))
+    _, us = timed(lambda: jax.block_until_ready(fn(x, w)))
+    table.append(["rmsnorm (4096x4096, bf16)", f"{us:,.0f}",
+                  "~0.5 FLOP/B", "memory-bound; fusion saves 1 pass"])
+    rows.append(BenchRow("kernels/rmsnorm", us, "memory-bound"))
+
+    # mesi tick over a fleet of simulations
+    from repro.kernels.mesi_transition import mesi_tick_pallas
+    B, n, m = 1024, 4, 3
+    import numpy as np
+    rng = np.random.default_rng(0)
+    args = [jnp.asarray(rng.integers(0, 2, (B, n, m)).astype(np.int32)),
+            jnp.ones((B, m), jnp.int32),
+            jnp.zeros((B, n, m), jnp.int32),
+            jnp.zeros((B, n, m), jnp.int32),
+            jnp.asarray(rng.integers(0, 2, (B, n)).astype(np.int32)),
+            jnp.asarray(rng.integers(0, m, (B, n)).astype(np.int32)),
+            jnp.asarray(rng.integers(0, 2, (B, n)).astype(np.int32))]
+    fn = jax.jit(lambda *a: mesi_tick_pallas(
+        *a, artifact_tokens=4096, interpret=True))
+    _, us = timed(lambda: jax.block_until_ready(fn(*args)))
+    table.append([f"mesi_tick ({B} sims/tick, interpret)", f"{us:,.0f}",
+                  f"{B / max(us, 1e-9) * 1e6:,.0f} sims/s",
+                  "fleet-scale DES hot loop"])
+    rows.append(BenchRow("kernels/mesi_tick", us,
+                         f"sims_per_tick={B}"))
+
+    md = ("### Kernel microbenchmarks (CPU interpret mode - "
+          "correctness platform, not TPU wall-time)\n\n"
+          + md_table(["kernel", "us/call", "derived", "roofline note"],
+                     table))
+    write_results("kernel_micro", rows, md)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

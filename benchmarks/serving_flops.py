@@ -1,0 +1,76 @@
+"""Beyond-paper benchmark: coherence savings in *prefill compute*.
+
+The paper measures token billing; on a TPU serving fleet the same
+redundancy is prefill FLOPs.  This benchmark drives the coherent
+serving runtime (real prefix-cache semantics on a zoo backbone) under
+the SS8.1 workload and reports FLOPs savings for:
+
+  broadcast  - naive full rebroadcast (baseline)
+  lazy       - the paper's recommended strategy
+  lazy + volatility-sorted prefix layout (beyond-paper: most-volatile
+               artifacts last -> invalidations trash the shortest KV
+               suffix)
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import BenchRow, md_table, timed, write_results
+from repro.configs import ARCHS, n_active_params, smoke_config
+from repro.runtime.coherent_serving import (CoherentServingSystem,
+                                            run_workload)
+
+ARCH = "qwen3-1.7b"
+N_AGENTS, N_ARTIFACTS, TOKENS, STEPS = 4, 3, 4096, 40
+#: skewed per-artifact volatility (plan doc / analysis doc / scratchpad)
+#: in the pessimal registration order (most volatile first) - the case
+#: a static layout cannot fix and write-moves-to-back converges out of.
+VOLATILITIES = [0.50, 0.10, 0.02]
+
+
+def _run(sorted_layout: bool):
+    cfg = smoke_config(ARCH)
+    system = CoherentServingSystem(
+        cfg, N_AGENTS,
+        {f"artifact-{i}": list(range(1, TOKENS + 1))
+         for i in range(N_ARTIFACTS)},
+        strategy="lazy", volatility_sorted=sorted_layout,
+        n_active_params=n_active_params(ARCHS[ARCH]))
+    return run_workload(system, STEPS, VOLATILITIES, seed=20260306)
+
+
+def run() -> list[BenchRow]:
+    rows, table = [], []
+    stats, us = timed(_run, False, warmup=0, iters=1)
+    stats_sorted, us2 = timed(_run, True, warmup=0, iters=1)
+    for name, st, t in [("lazy", stats, us),
+                        ("lazy+volatility-sorted-suffix", stats_sorted, us2)]:
+        table.append([
+            name, f"{st.prefill_tokens:,}",
+            f"{st.broadcast_tokens:,}",
+            f"{st.token_savings:.1%}",
+            f"{st.prefill_flops:.3e}",
+            f"{st.flops_savings:.1%}",
+        ])
+        rows.append(BenchRow(
+            name=f"serving/{name}", us_per_call=t,
+            derived=(f"flops_savings={st.flops_savings * 100:.1f}% "
+                     f"token_savings={st.token_savings * 100:.1f}%")))
+    extra_pp = (stats_sorted.flops_savings - stats.flops_savings) * 100
+    md = ("### Beyond-paper: prefill-compute savings in the serving "
+          f"runtime ({ARCH} backbone, n=4, m=3, |d|=4096, "
+          f"per-artifact V={VOLATILITIES})\n\n"
+          + md_table(["strategy", "prefill tokens", "broadcast tokens",
+                      "token savings", "prefill FLOPs",
+                      "FLOPs savings"], table)
+          + f"\nThe volatility-sorted-suffix prefix layout adds {extra_pp:+.1f} "
+          "pp of FLOPs savings on top of lazy coherence (hot artifacts "
+          "migrate to the back, so invalidations land on the shortest "
+          "KV suffix).\n")
+    write_results("serving_flops", rows, md,
+                  extra={"sorted_gain_pp": extra_pp})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,52 @@
+"""Paper Table 1: token synchronization cost by scenario (SS8.2).
+
+Broadcast vs lazy invalidation over the four canonical workloads
+(V in {0.05, 0.10, 0.25, 0.50}), 10 seeded runs, population sigma.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (BenchRow, fmt_k, fmt_pct, md_table, timed,
+                               write_results)
+from repro.sim import SCENARIOS, compare
+
+PAPER = {  # savings%, CRR, CHR% from the paper's Table 1
+    "A": (95.0, 0.050, 79.4),
+    "B": (92.3, 0.077, 66.8),
+    "C": (88.3, 0.117, 51.1),
+    "D": (84.2, 0.158, 34.6),
+}
+
+
+def run() -> list[BenchRow]:
+    rows, table = [], []
+    for key, scn in SCENARIOS.items():
+        cmp_, us = timed(compare, scn, warmup=1, iters=1)
+        n_episodes = scn.n_runs * 2  # broadcast + coherent
+        table.append([
+            scn.name, f"{scn.acs.volatility:.2f}",
+            fmt_k(cmp_.broadcast.total_tokens_mean,
+                  cmp_.broadcast.total_tokens_std),
+            fmt_k(cmp_.coherent.total_tokens_mean,
+                  cmp_.coherent.total_tokens_std),
+            fmt_pct(cmp_.savings_mean, cmp_.savings_std),
+            f"{cmp_.crr:.3f}",
+            fmt_pct(cmp_.chr_mean, cmp_.chr_std),
+            f"{PAPER[key][0]:.1f}% / {PAPER[key][2]:.1f}%",
+        ])
+        rows.append(BenchRow(
+            name=f"table1/{key}",
+            us_per_call=us / n_episodes,
+            derived=(f"savings={cmp_.savings_mean * 100:.1f}%"
+                     f" paper={PAPER[key][0]}%")))
+    md = ("### Table 1 - token synchronization cost by scenario "
+          "(10 runs, lazy vs broadcast)\n\n" + md_table(
+              ["Scenario", "V", "T_broadcast", "T_coherent", "Savings",
+               "CRR", "CHR", "paper (sav/CHR)"], table))
+    write_results("table1_scenarios", rows, md)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,51 @@
+"""Paper Table 2: strategy comparison under Scenario B (V = 0.10, SS8.2)."""
+
+from __future__ import annotations
+
+from benchmarks.common import (BenchRow, fmt_k, fmt_pct, md_table, timed,
+                               write_results)
+from repro.core import acs
+from repro.sim import SCENARIOS, compare
+
+PAPER = {  # T_sync (K tokens), savings% from the paper's Table 2
+    "eager": (132.7, 93.3),
+    "lazy": (152.3, 92.3),
+    "ttl": (589.8, 70.2),
+    "access_count": (155.2, 92.2),
+}
+STRATEGIES = [("eager", acs.EAGER), ("lazy", acs.LAZY), ("ttl", acs.TTL),
+              ("access_count", acs.ACCESS_COUNT)]
+
+
+def run() -> list[BenchRow]:
+    scn = SCENARIOS["B"]
+    rows, table = [], []
+    bc = compare(scn, acs.LAZY).broadcast  # shared broadcast baseline
+    table.append(["broadcast baseline",
+                  fmt_k(bc.total_tokens_mean, bc.total_tokens_std),
+                  "-", "full rebroadcast every step", "-"])
+    for name, code in STRATEGIES:
+        cmp_, us = timed(compare, scn, code, warmup=1, iters=1)
+        table.append([
+            name,
+            fmt_k(cmp_.coherent.total_tokens_mean,
+                  cmp_.coherent.total_tokens_std),
+            fmt_pct(cmp_.savings_mean, cmp_.savings_std),
+            f"CHR {fmt_pct(cmp_.chr_mean)}",
+            f"{PAPER[name][1]:.1f}%",
+        ])
+        rows.append(BenchRow(
+            name=f"table2/{name}",
+            us_per_call=us / (scn.n_runs * 2),
+            derived=(f"savings={cmp_.savings_mean * 100:.1f}%"
+                     f" paper={PAPER[name][1]}%")))
+    md = ("### Table 2 - strategy comparison, Scenario B (V = 0.10)\n\n"
+          + md_table(["Strategy", "T_sync", "Savings", "Notes",
+                      "paper savings"], table))
+    write_results("table2_strategies", rows, md)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

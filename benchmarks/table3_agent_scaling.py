@@ -1,0 +1,43 @@
+"""Paper Table 3: token cost vs agent count, Scenario B volatility (SS8.5)."""
+
+from __future__ import annotations
+
+from benchmarks.common import (BenchRow, fmt_k, fmt_pct, md_table, timed,
+                               write_results)
+from repro.core.theorem import savings_lower_bound_uniform
+from repro.sim import SCALING_AGENT_COUNTS, agent_scaling_scenario, compare
+
+PAPER = {2: 95.5, 4: 92.3, 8: 88.2, 16: 84.1}
+
+
+def run() -> list[BenchRow]:
+    rows, table = [], []
+    for n in SCALING_AGENT_COUNTS:
+        scn = agent_scaling_scenario(n)
+        cmp_, us = timed(compare, scn, warmup=1, iters=1)
+        lb = savings_lower_bound_uniform(n, scn.acs.n_steps,
+                                         scn.acs.volatility)
+        table.append([
+            n, fmt_k(cmp_.broadcast.total_tokens_mean),
+            fmt_k(cmp_.coherent.total_tokens_mean,
+                  cmp_.coherent.total_tokens_std),
+            fmt_pct(cmp_.savings_mean, cmp_.savings_std),
+            fmt_pct(lb), f"{PAPER[n]:.1f}%",
+        ])
+        rows.append(BenchRow(
+            name=f"table3/n={n}",
+            us_per_call=us / (scn.n_runs * 2),
+            derived=(f"savings={cmp_.savings_mean * 100:.1f}%"
+                     f" LB={lb * 100:.1f}% paper={PAPER[n]}%")))
+        assert cmp_.savings_mean > lb, "savings must beat theorem LB"
+    md = ("### Table 3 - scaling: token cost vs agent count "
+          "(V = 0.10, S = 40)\n\n" + md_table(
+              ["n agents", "T_broadcast", "T_coherent", "Savings",
+               "Formula LB", "paper"], table))
+    write_results("table3_agent_scaling", rows, md)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

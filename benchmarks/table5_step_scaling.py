@@ -1,0 +1,54 @@
+"""Paper Table 5: step-count scaling with fixed write budget (SS8.7).
+
+The theorem's central structural claim: T_broadcast grows O(S) while
+T_coherent grows only with the (fixed) write count - the S multiplier is
+eliminated.  W ~= 2 writes per artifact, so V = 2/S varies with S.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (BenchRow, fmt_k, fmt_pct, md_table, timed,
+                               write_results)
+from repro.core.theorem import savings_lower_bound_uniform
+from repro.sim import SCALING_STEPS, step_scaling_scenario, compare
+
+PAPER = {5: 85.8, 10: 90.3, 20: 93.1, 40: 95.0, 50: 95.5, 100: 96.2}
+
+
+def run() -> list[BenchRow]:
+    rows, table = [], []
+    coherent_costs = {}
+    for s in SCALING_STEPS:
+        scn = step_scaling_scenario(s)
+        cmp_, us = timed(compare, scn, warmup=1, iters=1)
+        lb = max(0.0, savings_lower_bound_uniform(
+            scn.acs.n_agents, s, scn.acs.volatility))
+        lb_str = fmt_pct(lb) if lb > 0 else "0% (bound<0)"
+        coherent_costs[s] = cmp_.coherent.total_tokens_mean
+        table.append([
+            s, fmt_k(cmp_.broadcast.total_tokens_mean),
+            fmt_k(cmp_.coherent.total_tokens_mean),
+            fmt_pct(cmp_.savings_mean, cmp_.savings_std),
+            lb_str, f"{PAPER[s]:.1f}%",
+        ])
+        rows.append(BenchRow(
+            name=f"table5/S={s}",
+            us_per_call=us / (scn.n_runs * 2),
+            derived=(f"savings={cmp_.savings_mean * 100:.1f}%"
+                     f" paper={PAPER[s]}%")))
+    growth = coherent_costs[100] / coherent_costs[5]
+    md = ("### Table 5 - step-count scaling (fixed W ~= 2, n = 4, "
+          "m = 3, |d| = 4096)\n\n" + md_table(
+              ["S steps", "T_broadcast", "T_coherent", "Savings (sim)",
+               "Formula LB", "paper"], table)
+          + f"\nT_coherent grows {growth:.1f}x over a 20x step range "
+          "(paper: 5.1x) - the operational signature of eliminating "
+          "the S multiplier; T_broadcast grows 19x (linear).\n")
+    write_results("table5_step_scaling", rows, md,
+                  extra={"coherent_growth_20x_steps": growth})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

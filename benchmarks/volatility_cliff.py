@@ -1,0 +1,55 @@
+"""Paper SS8.3: the volatility cliff that does not materialize.
+
+The lower-bound formula predicts savings collapse at V* = 1 - n/S = 0.9
+(n = 4, S = 40); simulation shows ~80% savings persisting through V = 1.0
+because (a) writes spread over m = 3 artifacts and (b) lazy deferred
+fetch collapses consecutive writes into one re-fetch.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (BenchRow, fmt_pct, md_table, timed,
+                               write_results)
+from repro.core.theorem import (savings_lower_bound_uniform,
+                                volatility_cliff)
+from repro.sim import CLIFF_VOLATILITIES, cliff_scenario, compare
+
+PAPER = {0.01: 97.1, 0.05: 95.0, 0.10: 92.4, 0.25: 88.3,
+         0.50: 84.3, 0.75: 82.2, 0.90: 81.1, 1.00: 80.6}
+
+
+def run() -> list[BenchRow]:
+    rows, table = [], []
+    at_cliff = None
+    for v in CLIFF_VOLATILITIES:
+        scn = cliff_scenario(v)
+        cmp_, us = timed(compare, scn, warmup=1, iters=1)
+        lb = savings_lower_bound_uniform(4, 40, v)
+        table.append([
+            f"{v:.2f}", fmt_pct(lb),
+            fmt_pct(cmp_.savings_mean, cmp_.savings_std),
+            f"{PAPER[v]:.1f}%",
+        ])
+        if v >= 0.90:
+            at_cliff = cmp_.savings_mean
+        rows.append(BenchRow(
+            name=f"cliff/V={v}",
+            us_per_call=us / (scn.n_runs * 2),
+            derived=(f"savings={cmp_.savings_mean * 100:.1f}%"
+                     f" LB={lb * 100:.1f}% paper={PAPER[v]}%")))
+    vstar = volatility_cliff(4, 40)
+    md = ("### SS8.3 - the volatility cliff (n = 4, S = 40, "
+          f"predicted V* = {vstar:.2f})\n\n" + md_table(
+              ["V", "Formula lower bound", "Observed savings (10 runs)",
+               "paper observed"], table)
+          + f"\nAt V = V* = {vstar:.1f} the observed savings are "
+          f"{at_cliff * 100:.1f}% - the predicted collapse does not "
+          "materialize (lazy deferred-fetch collapse; per-artifact "
+          "write rate is V/m).\n")
+    write_results("volatility_cliff", rows, md)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,37 @@
+"""Strategy explorer: sweep volatility and strategies, print the cliff.
+
+    PYTHONPATH=src python examples/coherence_vs_broadcast.py
+"""
+
+from repro.core import acs, theorem
+from repro.sim import SCENARIOS, cliff_scenario, compare
+
+
+def bar(frac: float, width: int = 40) -> str:
+    n = int(max(0.0, min(1.0, frac)) * width)
+    return "#" * n + "." * (width - n)
+
+
+def main() -> None:
+    print("strategy comparison, Scenario B (V = 0.10):")
+    for name, code in [("eager", acs.EAGER), ("lazy", acs.LAZY),
+                       ("ttl", acs.TTL),
+                       ("access_count", acs.ACCESS_COUNT)]:
+        c = compare(SCENARIOS["B"], code)
+        print(f"  {name:13s} |{bar(c.savings_mean)}| "
+              f"{c.savings_mean:6.1%} +- {c.savings_std:.1%}")
+
+    print("\nthe volatility cliff that never comes "
+          "(n=4, S=40; bound collapses at V*=0.9):")
+    print(f"  {'V':>5} {'theorem LB':>11} {'observed':>9}")
+    for v in (0.05, 0.25, 0.50, 0.75, 0.90, 1.00):
+        c = compare(cliff_scenario(v))
+        lb = theorem.savings_lower_bound_uniform(4, 40, v)
+        print(f"  {v:5.2f} {lb:10.0%}  {c.savings_mean:8.1%}  "
+              f"|{bar(c.savings_mean)}|")
+    print("\nlazy deferred-fetch collapse keeps savings ~80% even at "
+          "V = 1.0 (paper SS8.3).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Fault-tolerant, reshardable checkpointing.
+
+Properties a 1000-node deployment needs:
+  * **atomic**: write to a temp dir, fsync, rename - a crash mid-save
+    never corrupts the latest checkpoint;
+  * **async**: ``save_async`` hands the host copy to a background thread
+    so the train loop resumes immediately (device->host transfer is the
+    only synchronous part);
+  * **reshardable / elastic**: arrays are stored with their *global*
+    logical shapes (npz per leaf path); restore takes any mesh/sharding
+    and re-shards via ``jax.device_put`` - scale from 256 to 512 chips
+    (or to 1 CPU in tests) without converter tools;
+  * **self-describing**: a JSON manifest records step, config name, and
+    leaf paths; ``latest_step`` scans for the newest complete manifest;
+  * **retention**: keep the last k checkpoints (bounded disk).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def _unflatten(flat: dict[str, Any]) -> Any:
+    root: dict = {}
+    for path, val in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | pathlib.Path,
+                 keep: int = 3) -> None:
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._pending: Optional[threading.Thread] = None
+
+    # ------------------------------ save ------------------------------
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None
+             ) -> pathlib.Path:
+        """Synchronous atomic save."""
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        return self._write(step, host, meta or {})
+
+    def save_async(self, step: int, tree: Any,
+                   meta: Optional[dict] = None) -> None:
+        """Device->host copy now; disk IO in the background."""
+        self.wait()  # one in flight at a time
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._pending = threading.Thread(
+            target=self._write, args=(step, host, meta or {}), daemon=True)
+        self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, host_tree, meta: dict) -> pathlib.Path:
+        final = self.dir / f"step_{step:010d}"
+        tmp = self.dir / f".tmp_step_{step:010d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(host_tree)
+        np.savez(tmp / "arrays.npz",
+                 **{k: v for k, v in flat.items()})
+        manifest = {"step": step, "paths": sorted(flat),
+                    "meta": meta, "complete": True}
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)          # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:010d}",
+                          ignore_errors=True)
+
+    # ----------------------------- restore ----------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            mf = p / "manifest.json"
+            if mf.exists():
+                try:
+                    m = json.loads(mf.read_text())
+                    if m.get("complete"):
+                        out.append(int(m["step"]))
+                except (json.JSONDecodeError, KeyError):
+                    continue  # torn manifest = incomplete checkpoint
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[int, Any]:
+        """Load a checkpoint; optionally reshard onto ``shardings``
+        (a pytree of jax.sharding.Sharding matching the saved tree).
+
+        Elastic restart: the saved arrays are global, so any target mesh
+        works - restoring a 256-chip checkpoint onto 512 chips (or onto
+        this container's single CPU device) is the same call."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:010d}"
+        with np.load(path / "arrays.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten(flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return step, tree
+
+    def meta(self, step: int) -> dict:
+        path = self.dir / f"step_{step:010d}" / "manifest.json"
+        return json.loads(path.read_text())["meta"]

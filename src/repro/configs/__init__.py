@@ -1,0 +1,15 @@
+"""Architecture configs: assignment table entries + registry."""
+
+from repro.configs.base import (ModelConfig, MoEConfig, MLAConfig,
+                                MambaConfig, RWKVConfig, ShapeConfig,
+                                SHAPES, VisionStubConfig, AudioStubConfig)
+from repro.configs.registry import (ARCHS, get, register, smoke_config,
+                                    input_specs, shapes_for,
+                                    n_params_analytic, n_active_params)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "MambaConfig", "RWKVConfig",
+    "ShapeConfig", "SHAPES", "VisionStubConfig", "AudioStubConfig",
+    "ARCHS", "get", "register", "smoke_config", "input_specs",
+    "shapes_for", "n_params_analytic", "n_active_params",
+]

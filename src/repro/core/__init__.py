@@ -1,0 +1,26 @@
+"""Core of the paper: the Artifact Coherence System (ACS) and CCS protocol."""
+
+from repro.core.states import MESIState, CoherenceEvent, TRANSITION_TABLE
+from repro.core.acs import (
+    ACSConfig, ACSArrays, ACSMetrics, init_arrays, init_metrics, tick,
+    run_episode, BROADCAST, EAGER, LAZY, TTL, ACCESS_COUNT,
+    STRATEGY_NAMES, STRATEGY_CODES, SIGNAL_TOKENS,
+)
+from repro.core import theorem, invariants, model_check, strategies
+from repro.core.protocol import (
+    Message, EventBus, ArtifactStore, CoordinatorService,
+    ShardedCoordinator, AgentRuntime, TokenLedger,
+)
+from repro.core.lease import Lease, LeaseTable
+from repro.core.clock import VectorClock, MonotonicVersioner
+
+__all__ = [
+    "MESIState", "CoherenceEvent", "TRANSITION_TABLE",
+    "ACSConfig", "ACSArrays", "ACSMetrics", "init_arrays", "init_metrics",
+    "tick", "run_episode", "BROADCAST", "EAGER", "LAZY", "TTL",
+    "ACCESS_COUNT", "STRATEGY_NAMES", "STRATEGY_CODES", "SIGNAL_TOKENS",
+    "theorem", "invariants", "model_check", "strategies",
+    "Message", "EventBus", "ArtifactStore", "CoordinatorService",
+    "ShardedCoordinator", "AgentRuntime", "TokenLedger",
+    "Lease", "LeaseTable", "VectorClock", "MonotonicVersioner",
+]

@@ -1,0 +1,386 @@
+"""Artifact Coherence System (ACS) - vectorized JAX state machine.
+
+This is the executable form of the paper's six-tuple <A, D, Sigma, delta,
+alpha, T> (Def. 1).  The coherence state function alpha is a dense
+``(n_agents, n_artifacts)`` int32 array; one *tick* applies the serialized
+authority semantics for a single orchestration step (paper SS8.1):
+
+  * each agent acts with probability ``p_act``;
+  * an acting agent picks an artifact uniformly and writes with
+    probability ``V`` (else reads);
+  * reads from Invalid state trigger a coherence fill (fetch, |d| tokens);
+  * writes are read-modify-write: upgrade (peers invalidated), local
+    write, commit (version++, writer -> S per protocol SS5.3);
+  * token cost = full fetches x artifact size + 12-token signals.
+
+Strategies (paper SS5.5) differ in *when* entries become Invalid and
+whether content is pushed:
+
+  BROADCAST     every agent receives every artifact every step (baseline)
+  EAGER         invalidate-on-upgrade + push-on-commit to active sharers
+  LAZY          invalidate-on-commit; fetch-on-demand (recommended)
+  TTL           epoch lease refresh, decoupled from writes
+  ACCESS_COUNT  lazy + entries expire after k reads
+
+The same semantics are implemented as a Pallas TPU kernel in
+``repro.kernels.mesi_transition`` (batched over simulations) and as a
+message-level protocol in ``repro.core.protocol``; tests assert all three
+agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.states import MESIState
+
+# Strategy codes (static Python ints baked into jitted closures).
+BROADCAST = 0
+EAGER = 1
+LAZY = 2
+TTL = 3
+ACCESS_COUNT = 4
+
+STRATEGY_NAMES = {
+    BROADCAST: "broadcast",
+    EAGER: "eager",
+    LAZY: "lazy",
+    TTL: "ttl",
+    ACCESS_COUNT: "access_count",
+}
+STRATEGY_CODES = {v: k for k, v in STRATEGY_NAMES.items()}
+
+#: per-signal overhead (tokens) for invalidation / envelope messages (SS8.1)
+SIGNAL_TOKENS = 12
+
+_I = int(MESIState.I)
+_S = int(MESIState.S)
+_E = int(MESIState.E)
+_M = int(MESIState.M)
+
+
+@dataclasses.dataclass(frozen=True)
+class ACSConfig:
+    """Static scenario parameters (baked into the jitted tick)."""
+
+    n_agents: int
+    n_artifacts: int
+    artifact_tokens: int
+    n_steps: int
+    p_act: float = 0.75
+    volatility: float = 0.1          # per-action write probability V
+    strategy: int = LAZY
+    ttl_events: int = 10             # TTL lease, in logical action-events
+    access_k: int = 8                # access-count expiry threshold
+    max_stale_steps: int = 0         # 0 disables K-staleness enforcement
+
+
+class ACSArrays(NamedTuple):
+    """alpha and the bookkeeping the strategies need (all int32)."""
+
+    state: jax.Array            # (n, m) MESI state
+    version: jax.Array          # (m,)   canonical version at authority
+    last_sync: jax.Array        # (n, m) version at agent's last fill
+    reads_since_fetch: jax.Array  # (n, m) for ACCESS_COUNT
+    agent_actions: jax.Array    # (n,)   logical action clock per agent
+    last_validate: jax.Array    # (n, m) agent_actions value at last validate
+
+
+class ACSMetrics(NamedTuple):
+    fetch_tokens: jax.Array
+    push_tokens: jax.Array
+    signal_tokens: jax.Array
+    broadcast_tokens: jax.Array
+    n_fetches: jax.Array
+    n_hits: jax.Array
+    n_reads: jax.Array
+    n_writes: jax.Array
+    n_invalidation_signals: jax.Array
+    max_staleness: jax.Array
+    max_version_lag: jax.Array
+
+    @property
+    def total_tokens(self) -> jax.Array:
+        return (
+            self.fetch_tokens + self.push_tokens
+            + self.signal_tokens + self.broadcast_tokens
+        )
+
+    @property
+    def sync_tokens(self) -> jax.Array:
+        """Synchronous (critical-path) traffic only: demand fetches +
+        signals + broadcast sweeps.  Eager's push-on-commit is
+        asynchronous background traffic that overlaps agent think-time
+        (SS8.8 pointer-semantics accounting), so it is excluded here and
+        reported separately as ``push_tokens``."""
+        return self.fetch_tokens + self.signal_tokens + self.broadcast_tokens
+
+    @property
+    def cache_hit_rate(self) -> jax.Array:
+        denom = jnp.maximum(self.n_hits + self.n_fetches, 1)
+        return self.n_hits.astype(jnp.float32) / denom
+
+
+def init_arrays(cfg: ACSConfig) -> ACSArrays:
+    """Cold start: all caches Invalid, canonical version 1 (SS8.1)."""
+    n, m = cfg.n_agents, cfg.n_artifacts
+    z = jnp.zeros((n, m), jnp.int32)
+    return ACSArrays(
+        state=jnp.full((n, m), _I, jnp.int32),
+        version=jnp.ones((m,), jnp.int32),
+        last_sync=z,
+        reads_since_fetch=z,
+        agent_actions=jnp.zeros((n,), jnp.int32),
+        last_validate=z,
+    )
+
+
+def init_metrics() -> ACSMetrics:
+    z = jnp.zeros((), jnp.int32)
+    return ACSMetrics(z, z, z, z, z, z, z, z, z, z, z)
+
+
+def _entry_expired(cfg: ACSConfig, arrays: ACSArrays, a, d) -> jax.Array:
+    """Strategy-specific freshness overrides on a *valid* entry."""
+    if cfg.strategy == ACCESS_COUNT:
+        return arrays.reads_since_fetch[a, d] >= cfg.access_k
+    return jnp.zeros((), jnp.bool_)
+
+
+def _fill(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
+    """Coherence fill: FETCH_REQUEST -> content + version, I -> S."""
+    arrays = arrays._replace(
+        state=arrays.state.at[a, d].set(_S),
+        last_sync=arrays.last_sync.at[a, d].set(arrays.version[d]),
+        reads_since_fetch=arrays.reads_since_fetch.at[a, d].set(0),
+        last_validate=arrays.last_validate.at[a, d].set(
+            arrays.agent_actions[a]),
+    )
+    met = met._replace(
+        fetch_tokens=met.fetch_tokens + cfg.artifact_tokens + SIGNAL_TOKENS,
+        n_fetches=met.n_fetches + 1,
+    )
+    return arrays, met
+
+
+def _access(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics, a, d):
+    """Shared read/write prologue: ensure a valid, fresh local copy.
+
+    Returns updated (arrays, metrics).  Counts hit/miss and enforces
+    K-bounded staleness when enabled (Invariant 3, SS6.2).
+    """
+    staleness = arrays.agent_actions[a] - arrays.last_validate[a, d]
+    entry_valid = arrays.state[a, d] != _I
+    # Content staleness a coherent read may observe: canonical version
+    # minus the version this valid entry was filled at.  Zero for
+    # lazy/eager/access-count (writes invalidate readers); bounded by
+    # the lease for TTL.
+    version_lag = arrays.version[d] - arrays.last_sync[a, d]
+    met = met._replace(
+        max_staleness=jnp.maximum(
+            met.max_staleness, jnp.where(entry_valid, staleness, 0)),
+        max_version_lag=jnp.maximum(
+            met.max_version_lag, jnp.where(entry_valid, version_lag, 0)))
+
+    invalid = arrays.state[a, d] == _I
+    expired = jnp.logical_and(~invalid, _entry_expired(cfg, arrays, a, d))
+
+    if cfg.max_stale_steps > 0:
+        # forced revalidation: version check (12 tokens); full fetch only
+        # if the canonical version moved on.
+        needs_check = jnp.logical_and(
+            ~invalid, staleness > cfg.max_stale_steps)
+        version_moved = arrays.last_sync[a, d] != arrays.version[d]
+        met = met._replace(signal_tokens=met.signal_tokens + jnp.where(
+            needs_check, SIGNAL_TOKENS, 0))
+        arrays = arrays._replace(last_validate=jnp.where(
+            jnp.logical_and(needs_check, ~version_moved),
+            arrays.last_validate.at[a, d].set(arrays.agent_actions[a]),
+            arrays.last_validate))
+        expired = jnp.logical_or(
+            expired, jnp.logical_and(needs_check, version_moved))
+
+    miss = jnp.logical_or(invalid, expired)
+
+    def on_miss(args):
+        arrays, met = args
+        return _fill(cfg, arrays, met, a, d)
+
+    def on_hit(args):
+        arrays, met = args
+        met = met._replace(n_hits=met.n_hits + 1)
+        return arrays, met
+
+    return jax.lax.cond(miss, on_miss, on_hit, (arrays, met))
+
+
+def _do_read(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
+    arrays, met = _access(cfg, arrays, met, a, d)
+    arrays = arrays._replace(
+        reads_since_fetch=arrays.reads_since_fetch.at[a, d].add(1))
+    met = met._replace(n_reads=met.n_reads + 1)
+    return arrays, met
+
+
+def _do_write(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
+    """Upgrade -> local write -> commit (SS5.3), serialized via authority."""
+    # Read-modify-write: the writer needs a valid base copy.
+    arrays, met = _access(cfg, arrays, met, a, d)
+
+    if cfg.strategy != TTL:
+        # UPGRADE: authority invalidates peers; one signal per peer whose
+        # copy was actually valid (idempotent re-invalidation is free).
+        peer_valid = arrays.state[:, d] != _I
+        peer_valid = peer_valid.at[a].set(False)
+        n_signals = jnp.sum(peer_valid.astype(jnp.int32))
+        new_col = jnp.where(peer_valid, _I, arrays.state[:, d])
+        arrays = arrays._replace(state=arrays.state.at[:, d].set(new_col))
+        met = met._replace(
+            signal_tokens=met.signal_tokens + SIGNAL_TOKENS * n_signals,
+            n_invalidation_signals=met.n_invalidation_signals + n_signals,
+        )
+    else:
+        peer_valid = jnp.zeros((cfg.n_agents,), jnp.bool_)
+
+    # Local write (E -> M) then COMMIT: version++, writer downgrades to S.
+    new_version = arrays.version[d] + 1
+    arrays = arrays._replace(
+        version=arrays.version.at[d].set(new_version),
+        state=arrays.state.at[a, d].set(_S),
+        last_sync=arrays.last_sync.at[a, d].set(new_version),
+        reads_since_fetch=arrays.reads_since_fetch.at[a, d].set(0),
+        last_validate=arrays.last_validate.at[a, d].set(
+            arrays.agent_actions[a]),
+    )
+    met = met._replace(n_writes=met.n_writes + 1)
+
+    if cfg.strategy == EAGER:
+        # Push-on-commit: pre-populate the caches of active sharers
+        # (peers that held a valid copy at upgrade time), SS8.8.
+        n_push = jnp.sum(peer_valid.astype(jnp.int32))
+        col_state = jnp.where(peer_valid, _S, arrays.state[:, d])
+        col_sync = jnp.where(peer_valid, new_version, arrays.last_sync[:, d])
+        col_reads = jnp.where(peer_valid, 0, arrays.reads_since_fetch[:, d])
+        col_val = jnp.where(peer_valid, arrays.agent_actions,
+                            arrays.last_validate[:, d])
+        arrays = arrays._replace(
+            state=arrays.state.at[:, d].set(col_state),
+            last_sync=arrays.last_sync.at[:, d].set(col_sync),
+            reads_since_fetch=arrays.reads_since_fetch.at[:, d].set(col_reads),
+            last_validate=arrays.last_validate.at[:, d].set(col_val),
+        )
+        met = met._replace(push_tokens=met.push_tokens + n_push * (
+            cfg.artifact_tokens + SIGNAL_TOKENS))
+    return arrays, met
+
+
+def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
+         key: jax.Array, step: jax.Array):
+    """One orchestration step for every agent (serialized authority)."""
+    k_act, k_art, k_wr = jax.random.split(key, 3)
+    acts = jax.random.bernoulli(k_act, cfg.p_act, (cfg.n_agents,))
+    arts = jax.random.randint(k_art, (cfg.n_agents,), 0, cfg.n_artifacts)
+    writes = jax.random.bernoulli(k_wr, cfg.volatility, (cfg.n_agents,))
+
+    if cfg.strategy == BROADCAST:
+        # Full-state rebroadcast: every agent receives every artifact.
+        inject = cfg.n_agents * cfg.n_artifacts * (
+            cfg.artifact_tokens + SIGNAL_TOKENS)
+        met = met._replace(broadcast_tokens=met.broadcast_tokens + inject)
+        arrays = arrays._replace(
+            state=jnp.full_like(arrays.state, _S),
+            last_sync=jnp.broadcast_to(
+                arrays.version[None, :], arrays.last_sync.shape),
+            last_validate=jnp.broadcast_to(
+                arrays.agent_actions[:, None], arrays.last_validate.shape),
+        )
+
+    if cfg.strategy == TTL:
+        # Epoch lease refresh, driven by the orchestrator's logical event
+        # clock (expected n*p_act action events per step).  All resident
+        # subscriptions are refreshed each epoch; entries never expire
+        # mid-epoch, so write activity is irrelevant (SS5.5 TTL).
+        rate = cfg.n_agents * cfg.p_act
+        epoch_now = jnp.floor(rate * step.astype(jnp.float32)
+                              / cfg.ttl_events).astype(jnp.int32)
+        epoch_prev = jnp.where(
+            step > 0,
+            jnp.floor(rate * (step.astype(jnp.float32) - 1.0)
+                      / cfg.ttl_events).astype(jnp.int32),
+            -1)
+        do_refresh = epoch_now > epoch_prev
+
+        def refresh(args):
+            arrays, met = args
+            n_fill = cfg.n_agents * cfg.n_artifacts
+            arrays = arrays._replace(
+                state=jnp.full_like(arrays.state, _S),
+                last_sync=jnp.broadcast_to(
+                    arrays.version[None, :], arrays.last_sync.shape),
+                reads_since_fetch=jnp.zeros_like(arrays.reads_since_fetch),
+                last_validate=jnp.broadcast_to(
+                    arrays.agent_actions[:, None],
+                    arrays.last_validate.shape),
+            )
+            met = met._replace(
+                fetch_tokens=met.fetch_tokens
+                + n_fill * cfg.artifact_tokens,
+                n_fetches=met.n_fetches + n_fill)
+            return arrays, met
+
+        arrays, met = jax.lax.cond(
+            do_refresh, refresh, lambda x: x, (arrays, met))
+
+    def agent_body(a, carry):
+        arrays, met = carry
+        act = acts[a]
+        d = arts[a]
+        is_write = writes[a]
+
+        def do_act(args):
+            arrays, met = args
+            arrays = arrays._replace(
+                agent_actions=arrays.agent_actions.at[a].add(1))
+            if cfg.strategy == BROADCAST:
+                # Everything is already injected; actions are free.
+                met = met._replace(
+                    n_reads=met.n_reads + jnp.where(is_write, 0, 1),
+                    n_writes=met.n_writes + jnp.where(is_write, 1, 0),
+                    n_hits=met.n_hits + 1,
+                )
+                # Writes still bump the canonical version.
+                arrays = arrays._replace(version=jnp.where(
+                    is_write, arrays.version.at[d].add(1), arrays.version))
+                return arrays, met
+            return jax.lax.cond(
+                is_write,
+                lambda args: _do_write(cfg, *args, a, d),
+                lambda args: _do_read(cfg, *args, a, d),
+                (arrays, met))
+
+        return jax.lax.cond(act, do_act, lambda x: x, (arrays, met))
+
+    arrays, met = jax.lax.fori_loop(
+        0, cfg.n_agents, agent_body, (arrays, met))
+    return arrays, met
+
+
+def run_episode(cfg: ACSConfig, key: jax.Array) -> ACSMetrics:
+    """Run a full S-step episode; returns final metrics."""
+    arrays = init_arrays(cfg)
+    met = init_metrics()
+    keys = jax.random.split(key, cfg.n_steps)
+
+    def body(carry, inp):
+        arrays, met = carry
+        step, k = inp
+        arrays, met = tick(cfg, arrays, met, k, step)
+        return (arrays, met), None
+
+    steps = jnp.arange(cfg.n_steps, dtype=jnp.int32)
+    (arrays, met), _ = jax.lax.scan(body, (arrays, met), (steps, keys))
+    return met

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, SyntheticLMStream,
+                                 PrefetchLoader)
+
+__all__ = ["DataConfig", "SyntheticLMStream", "PrefetchLoader"]

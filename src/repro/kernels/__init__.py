@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Kernels (each: pl.pallas_call + explicit BlockSpec VMEM tiling; jit
+wrappers in ``ops.py``; pure-jnp oracles in ``ref.py``):
+
+  * ``flash_attention``  - FA-2-style GQA attention (train / prefill)
+  * ``decode_attention`` - flash-decode split-K (single-token serving)
+  * ``rmsnorm``          - fused RMS normalization
+  * ``mesi_tick``        - batched coherence tick (fleet-scale DES)
+"""
+
+from repro.kernels.ops import (rmsnorm, flash_attention, decode_attention,
+                               mesi_tick)
+from repro.kernels import ref
+
+__all__ = ["rmsnorm", "flash_attention", "decode_attention", "mesi_tick",
+           "ref"]

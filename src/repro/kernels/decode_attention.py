@@ -1,0 +1,115 @@
+"""Flash-decode (split-K) single-token GQA attention Pallas TPU kernel.
+
+Decode is memory-bound: one query token attends over an L-long KV cache,
+so arithmetic intensity ~ O(1) and the roofline is the HBM stream of the
+cache.  The kernel's job is to stream K/V tiles through VMEM exactly
+once with running-softmax combining - the TPU analogue of
+FlashDecoding's split-K partial softmax.
+
+Grid = (B, Hkv, L/bk): each program handles the whole GQA *group* of
+query heads for one kv head (the group shares the K/V tile it just paid
+to load - a TPU-friendly reuse the CUDA version gets from warp layout).
+Running (m, l, acc) scratch persists across the sequential k dimension.
+
+A ``kv_len`` vector masks the tail, so one compiled kernel serves any
+cache occupancy (paged/ragged serving upstream).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, block_k: int):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, d) query group
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)              # (bk, d)
+    logits = jax.lax.dot_general(                    # (G, bk)
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    kv_len = len_ref[0]
+    kpos = j * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 1)
+    logits = jnp.where(kpos < kv_len, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array,
+                            kv_len: jax.Array | None = None, *,
+                            scale: float | None = None,
+                            block_k: int = 256,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, D); caches: (B, Hkv, L, D); kv_len: (B,) int32 or None.
+
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    hkv, lmax = k_cache.shape[1], k_cache.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    block_k = min(block_k, lmax)
+    assert lmax % block_k == 0, "cache length must divide block_k"
+    if kv_len is None:
+        kv_len = jnp.full((b,), lmax, jnp.int32)
+
+    # regroup queries: (B, Hkv, G, D) so one program owns a kv head group
+    qg = q.reshape(b, hkv, group, d)
+    grid = (b, hkv, lmax // block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1,), lambda b_, h, j: (b_,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, kv_len)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,119 @@
+"""FlashAttention-style GQA attention Pallas TPU kernel (train/prefill).
+
+Adaptation of the FA-2 schedule to the TPU memory hierarchy:
+  * grid = (batch, q_heads, Lq/bq, Lk/bk); the trailing (k) dimension is
+    innermost and sequential on TPU, so the running (m, l, acc) softmax
+    statistics live in VMEM scratch and persist across k-steps;
+  * BlockSpec tiling keeps one (bq x d) query tile and one (bk x d)
+    key/value tile in VMEM; the (bq x bk) logit tile never touches HBM -
+    that is the IO saving that makes attention compute-bound on the MXU;
+  * GQA is expressed in the index_map (kv head = q head // group), so no
+    repeated K/V materialization in HBM;
+  * block sizes default to 128 (MXU-aligned: the systolic array is
+    128x128; last-dim tiles must be multiples of 128 lanes).
+
+Causal masking keeps the full k-range and masks per-tile.  On real
+hardware the obvious next step is skipping fully-masked k-tiles (saves
+~2x on causal prefill); that is recorded as a perf-iteration candidate
+in EXPERIMENTS.md SSPerf rather than hidden here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, lq: int, lk: int,
+                  block_q: int, block_k: int):
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)              # (bk, d)
+    logits = jax.lax.dot_general(                    # (bq, bk) on the MXU
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    if causal:
+        i = pl.program_id(2)
+        # absolute positions; q rows are the last lq positions of lk
+        qpos = i * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0) + (lk - lq)
+        kpos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        logits = jnp.where(kpos <= qpos, logits, NEG_INF)
+
+    m_prev = m_scr[...]                              # (bq, 1)
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                      # (bq, bk)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D).  Returns (B, Hq, Lq, D)."""
+    b, hq, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    assert lq % block_q == 0 and lk % block_k == 0, (
+        "seq lens must divide block sizes; pad upstream")
+
+    grid = (b, hq, lq // block_q, lk // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, lq=lq, lk=lk,
+        block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,84 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a real TPU these dispatch the compiled Mosaic kernels; on CPU (this
+container) they run the same kernel bodies under ``interpret=True``,
+which is how correctness is validated against the ``ref.py`` oracles.
+Set ``REPRO_KERNEL_BACKEND=ref`` to route everything through the pure
+jnp oracles (used by the dry-run path, where kernels are swapped for
+reference ops so XLA cost analysis reflects the fused-op FLOPs).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mesi_transition import mesi_tick_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+
+
+def _use_ref() -> bool:
+    return os.environ.get("REPRO_KERNEL_BACKEND", "pallas") == "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, weight, eps: float = 1e-6, block_rows: int = 128):
+    if _use_ref():
+        return ref.rmsnorm_ref(x, weight, eps)
+    return rmsnorm_pallas(x, weight, eps=eps, block_rows=block_rows,
+                          interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, scale=None,
+                    block_q: int = 128, block_k: int = 128):
+    if _use_ref():
+        return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k"))
+def decode_attention(q, k_cache, v_cache, kv_len=None, scale=None,
+                     block_k: int = 256):
+    if _use_ref():
+        return ref.decode_attention_ref(q, k_cache, v_cache, kv_len,
+                                        scale=scale)
+    return decode_attention_pallas(
+        q, k_cache, v_cache, kv_len, scale=scale, block_k=block_k,
+        interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan(r, k, v, w, bonus, initial_state=None, chunk: int = 64):
+    if _use_ref():
+        return ref.rwkv6_scan_ref(r, k, v, w, bonus, initial_state)
+    return rwkv6_scan_pallas(r, k, v, w, bonus, initial_state,
+                             chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "artifact_tokens", "eager", "access_k", "signal_tokens",
+    "block_sims"))
+def mesi_tick(state, version, last_sync, reads_since_fetch, acts, arts,
+              writes, artifact_tokens: int, eager: bool = False,
+              access_k: int = 0, signal_tokens: int = 12,
+              block_sims: int = 128):
+    return mesi_tick_pallas(
+        state, version, last_sync, reads_since_fetch, acts, arts, writes,
+        artifact_tokens=artifact_tokens, eager=eager, access_k=access_k,
+        signal_tokens=signal_tokens, block_sims=block_sims,
+        interpret=_interpret())

@@ -1,0 +1,164 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematically transparent reference the kernels are
+validated against (``tests/test_kernels_*`` sweep shapes/dtypes and
+assert_allclose kernel-vs-oracle).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.states import MESIState
+
+_I, _S = int(MESIState.I), int(MESIState.S)
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    """RMSNorm (Zhang & Sennrich 2019): x * rsqrt(mean(x^2)+eps) * w."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dtype) * weight
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  scale: float | None = None) -> jax.Array:
+    """GQA softmax attention oracle.
+
+    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D) with Hq % Hkv == 0.
+    Computed in fp32 regardless of input dtype.
+    """
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    q32 = q.astype(jnp.float32) * scale
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    kg = jnp.repeat(k32, group, axis=1)
+    vg = jnp.repeat(v32, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q32, kg)
+    if causal:
+        lk = k.shape[2]
+        # rows are the LAST lq positions of the lk-length sequence
+        qpos = jnp.arange(lq)[:, None] + (lk - lq)
+        kpos = jnp.arange(lk)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vg)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, kv_len: jax.Array | None = None,
+                         scale: float | None = None) -> jax.Array:
+    """Single-token GQA decode oracle.
+
+    q: (B, Hq, D); caches: (B, Hkv, Lmax, D); kv_len: (B,) valid lengths
+    (None = full).  Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    hkv, lmax = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    q32 = q.astype(jnp.float32) * scale
+    kg = jnp.repeat(k_cache.astype(jnp.float32), group, axis=1)
+    vg = jnp.repeat(v_cache.astype(jnp.float32), group, axis=1)
+    logits = jnp.einsum("bhd,bhkd->bhk", q32, kg)
+    if kv_len is not None:
+        mask = jnp.arange(lmax)[None, None, :] < kv_len[:, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", probs, vg)
+    return out.astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, bonus, initial_state=None):
+    """WKV recurrence oracle: r/k/v/w (B, T, H, dh); bonus (H, dh).
+
+    Matches the per-step recurrence in ``repro.models.rwkv6._wkv_step``
+    (the production model path)."""
+    b, t, h, dh = r.shape
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, dh, dh), jnp.float32)
+    r32, k32, v32, w32 = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = bonus.astype(jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp               # (B, H, dh) each
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    inputs = tuple(x.transpose(1, 0, 2, 3) for x in (r32, k32, v32, w32))
+    state, ys = jax.lax.scan(step, initial_state, inputs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def mesi_tick_ref(state, version, last_sync, reads_since_fetch,
+                  acts, arts, writes,
+                  artifact_tokens: int, eager: bool = False,
+                  access_k: int = 0, signal_tokens: int = 12):
+    """Batched one-tick MESI oracle (numpy, serialized agents).
+
+    Shapes: state/last_sync/reads (B, n, m) int32; version (B, m);
+    acts/writes (B, n) bool; arts (B, n) int32.
+    Returns updated arrays + per-sim counters dict.  Semantics identical
+    to repro.core.acs lazy/eager tick (without TTL/broadcast, which are
+    whole-array ops handled outside the kernel).
+    """
+    state = np.array(state, dtype=np.int32)
+    version = np.array(version, dtype=np.int32)
+    last_sync = np.array(last_sync, dtype=np.int32)
+    reads = np.array(reads_since_fetch, dtype=np.int32)
+    B, n, m = state.shape
+    fetch_tokens = np.zeros(B, np.int32)
+    sig_tokens = np.zeros(B, np.int32)
+    push_tokens = np.zeros(B, np.int32)
+    n_fetches = np.zeros(B, np.int32)
+    n_hits = np.zeros(B, np.int32)
+
+    for s in range(B):
+        for a in range(n):
+            if not acts[s, a]:
+                continue
+            d = int(arts[s, a])
+            # --- access prologue (read-modify-write needs a valid copy)
+            expired = access_k > 0 and reads[s, a, d] >= access_k
+            if state[s, a, d] == _I or expired:
+                state[s, a, d] = _S
+                last_sync[s, a, d] = version[s, d]
+                reads[s, a, d] = 0
+                fetch_tokens[s] += artifact_tokens + signal_tokens
+                n_fetches[s] += 1
+            else:
+                n_hits[s] += 1
+            if writes[s, a]:
+                peers = [b for b in range(n)
+                         if b != a and state[s, b, d] != _I]
+                for b in peers:
+                    state[s, b, d] = _I
+                sig_tokens[s] += signal_tokens * len(peers)
+                version[s, d] += 1
+                state[s, a, d] = _S
+                last_sync[s, a, d] = version[s, d]
+                reads[s, a, d] = 0
+                if eager:
+                    for b in peers:
+                        state[s, b, d] = _S
+                        last_sync[s, b, d] = version[s, d]
+                        reads[s, b, d] = 0
+                        push_tokens[s] += artifact_tokens + signal_tokens
+            else:
+                reads[s, a, d] += 1
+    return (state, version, last_sync, reads,
+            {"fetch_tokens": fetch_tokens, "signal_tokens": sig_tokens,
+             "push_tokens": push_tokens, "n_fetches": n_fetches,
+             "n_hits": n_hits})

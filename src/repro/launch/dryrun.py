@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds ShapeDtypeStruct stand-ins (no allocation) for params,
+     optimizer state, batch/caches via jax.eval_shape;
+  2. jits the appropriate step (train_step for train shapes, prefill /
+     serve_step for inference shapes) with the production shardings;
+  3. ``.lower().compile()`` against the 16x16 single-pod mesh and the
+     2x16x16 multi-pod mesh;
+  4. records memory_analysis (proves it fits), cost_analysis
+     (FLOPs/bytes) and the collective schedule parsed from the
+     partitioned HLO -> benchmarks/results/dryrun.json, which SSRoofline
+     and SSPerf read.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+      --shape train_4k --mesh single
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SHAPES, get, input_specs,
+                           n_active_params, n_params_analytic, shapes_for)
+from repro.launch import analytic as an
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.runtime import steps as step_factories
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / \
+    "benchmarks" / "results" / "dryrun.json"
+
+
+def _mem_fields(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[f] = int(getattr(ma, f, 0))
+    out["total_bytes_per_device"] = (
+        out["argument_size_in_bytes"] + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"] - out["alias_size_in_bytes"])
+    return out
+
+
+def _moment_dtype(cfg) -> str:
+    return ("bfloat16" if n_params_analytic(cfg) > 6e10 else "float32")
+
+
+def cell_options(cfg, shape_cfg, mesh) -> step_factories.StepOptions:
+    """Production memory policy per cell (recorded in the results):
+
+    * FSDP when TP-sharded weights alone exceed ~8 GB/chip (jamba-398b,
+      llama-3.2-vision-90b);
+    * gradient-accumulation microbatches sized so remat boundary
+    activations (B_loc x S x d x 2 x L) stay under ~4 GB/chip.
+    """
+    tp = mesh.shape.get("model", 1)
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh.shape.get(a, 1)
+    w_per_chip = n_params_analytic(cfg) * 2 / tp
+    fsdp = w_per_chip > 8e9
+    n_micro = 1
+    if shape_cfg.kind == "train":
+        from repro.configs.registry import _dec_len
+        b_loc = max(shape_cfg.global_batch // dp, 1)
+        boundary = (b_loc * _dec_len(cfg, shape_cfg.seq_len)
+                    * cfg.d_model * 2 * cfg.n_layers)
+        while boundary / n_micro > 4e9 and n_micro < b_loc:
+            n_micro *= 2
+    return step_factories.StepOptions(fsdp=fsdp,
+                                      n_microbatches=n_micro)
+
+
+def _adapt_moe_dispatch(cfg, mesh):
+    """Production MoE dispatch: one slice per DP shard (SSPerf iteration
+    1: removes the dispatch-buffer partial-sum across the data axis)."""
+    if cfg.moe is None or cfg.moe.dispatch_slices != 1:
+        return cfg
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = 1
+    for a in axes:
+        dp *= mesh.shape[a]
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, dispatch_slices=dp, dispatch_axes=axes))
+
+
+def _lower_and_compile(cfg, shape_cfg, mesh, options=None):
+    """One lower+compile of the appropriate step; returns compiled."""
+    cfg = _adapt_moe_dispatch(cfg, mesh)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: tf.init_params(cfg, k), key)
+    specs = input_specs(cfg, shape_cfg)
+    options = options or cell_options(cfg, shape_cfg, mesh)
+    with mesh:
+        if shape_cfg.kind == "train":
+            opt_cfg = adamw.AdamWConfig(moment_dtype=_moment_dtype(cfg))
+            opt_shape = jax.eval_shape(
+                lambda: adamw.init_state(opt_cfg, params_shape))
+            fn, in_sh, _ = step_factories.make_train_step(
+                cfg, opt_cfg, mesh, params_shape, specs, options)
+            mb_specs = step_factories.microbatch_shape(
+                specs, options.n_microbatches)
+            lowered = fn.lower(
+                _shard_struct(params_shape, in_sh[0]),
+                _shard_struct(opt_shape, in_sh[1]),
+                _shard_struct(mb_specs, in_sh[2]))
+        elif shape_cfg.kind == "prefill":
+            ctx_len = 0
+            if cfg.family == "vlm":
+                ctx_len = cfg.vision.n_image_tokens
+            if cfg.family == "audio":
+                ctx_len = shape_cfg.seq_len
+            cache_shape = jax.eval_shape(lambda: tf.init_cache(
+                cfg, shape_cfg.global_batch,
+                specs["tokens"].shape[1], ctx_len=ctx_len))
+            fn, in_sh, _ = step_factories.make_prefill_step(
+                cfg, mesh, params_shape, specs, cache_shape, options)
+            lowered = fn.lower(
+                _shard_struct(params_shape, in_sh[0]),
+                _shard_struct(specs, in_sh[1]),
+                _shard_struct(cache_shape, in_sh[2]))
+        else:  # decode
+            cache_shape = specs["cache"]
+            fn, in_sh, _ = step_factories.make_decode_step(
+                cfg, mesh, params_shape, cache_shape, options)
+            lowered = fn.lower(
+                _shard_struct(params_shape, in_sh[0]),
+                _shard_struct({"token": specs["token"]},
+                              {"token": in_sh[1]})["token"],
+                _shard_struct(cache_shape, in_sh[2]))
+        return lowered.compile()
+
+
+def _reduced_cfg(cfg, n_blocks: int):
+    """Config with n_blocks superblocks (for scan-body extrapolation)."""
+    specs = tf.layer_specs(cfg)
+    prefix, period = tf.split_pattern(specs)
+    over = dict(n_layers=prefix + n_blocks * period)
+    if cfg.encoder_layers:
+        over["encoder_layers"] = n_blocks
+    return dataclasses.replace(cfg, **over)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               verbose: bool = True,
+               extrapolate_collectives: bool = True) -> dict:
+    cfg = get(arch)
+    shape_cfg = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    n_chips = 512 if multi_pod else 256
+    t0 = time.time()
+
+    options = cell_options(cfg, shape_cfg, mesh)
+    compiled = _lower_and_compile(cfg, shape_cfg, mesh, options)
+    cost = compiled.cost_analysis()
+    mem = _mem_fields(compiled)
+    coll_raw = rf.collective_bytes_from_hlo(compiled.as_text())
+
+    # Scan-body collective correction: compile 1- and 2-superblock
+    # variants; the delta is one body's collectives (roofline.py).
+    note = ""
+    coll = coll_raw
+    specs = tf.layer_specs(cfg)
+    prefix, period = tf.split_pattern(specs)
+    n_super = (cfg.n_layers - prefix) // period
+    if extrapolate_collectives and n_super > 2:
+        c1 = rf.collective_bytes_from_hlo(_lower_and_compile(
+            _reduced_cfg(cfg, 1), shape_cfg, mesh).as_text())
+        c2 = rf.collective_bytes_from_hlo(_lower_and_compile(
+            _reduced_cfg(cfg, 2), shape_cfg, mesh).as_text())
+        coll = rf.extrapolate_body(c1, c2, n_super)
+        note = (f"collectives extrapolated from 1/2-superblock "
+                f"compiles x{n_super}")
+
+    n_active = n_active_params(cfg)
+    analytic = an.analytic_cost(
+        cfg, shape_cfg, n_chips, tp=mesh.shape["model"],
+        moment_bytes=2 if _moment_dtype(cfg) == "bfloat16" else 4)
+    report = rf.build_report(
+        arch=arch, shape=shape_name, mesh_name=mesh_name,
+        n_chips=n_chips, analytic=analytic, cost=cost, mem=mem,
+        coll=coll,
+        model_flops=rf.model_flops_for(cfg, shape_cfg, n_active),
+        note=note)
+    result = report.to_dict()
+    result.update(
+        status="ok",
+        compile_s=round(time.time() - t0, 1),
+        n_params=n_params_analytic(cfg),
+        n_params_active=n_active,
+        collective_raw_gbytes=coll_raw.total_bytes / 1e9,
+        options={"fsdp": options.fsdp,
+                 "n_microbatches": options.n_microbatches},
+    )
+    if verbose:
+        print(f"  memory_analysis: {json.dumps(mem)}")
+        print(f"  cost_analysis(raw, see caveat): "
+              f"flops={cost.get('flops', 0):.3e} "
+              f"bytes={cost.get('bytes accessed', 0):.3e}")
+        print(f"  collectives: {coll.n_ops} ops, "
+              f"{coll.total_bytes / 1e9:.3f} GB/device "
+              f"{json.dumps(coll.by_op)}")
+        print(f"  roofline: compute={report.compute_s:.4f}s "
+              f"memory={report.memory_s:.4f}s "
+              f"collective={report.collective_s:.4f}s "
+              f"-> {report.dominant}-bound "
+              f"(useful_ratio={report.useful_ratio:.2f})")
+    return result
+
+
+def _shard_struct(shape_tree, shard_tree):
+    """Attach shardings to ShapeDtypeStructs (still no allocation)."""
+    def one(s, sh):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree.map(one, shape_tree, shard_tree)
+
+
+def load_results() -> dict:
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return {}
+
+
+def save_results(results: dict) -> None:
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS.write_text(json.dumps(results, indent=1, default=float))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default all)")
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cached cells")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run needs the 512 placeholder devices; run as a script so "
+        "the XLA_FLAGS line executes before jax init")
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    results = load_results()
+    failures = []
+    for arch in archs:
+        cfg = get(arch)
+        shape_list = ([SHAPES[args.shape]] if args.shape
+                      else shapes_for(cfg))
+        for shape_cfg in shape_list:
+            meshes = {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                cell = f"{arch}|{shape_cfg.name}|{mesh_name}"
+                if cell in results and \
+                        results[cell].get("status") == "ok" \
+                        and not args.force:
+                    print(f"[cached] {cell}")
+                    continue
+                print(f"[lower+compile] {cell}", flush=True)
+                try:
+                    results[cell] = lower_cell(arch, shape_cfg.name,
+                                               multi)
+                except Exception as e:
+                    traceback.print_exc()
+                    results[cell] = {"status": "failed",
+                                     "error": f"{type(e).__name__}: {e}"}
+                    failures.append(cell)
+                save_results(results)
+    n_ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    print(f"\ndry-run summary: {n_ok} ok, {len(failures)} failed")
+    if failures:
+        for f in failures:
+            print(f"  FAILED {f}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set
+``--xla_force_host_platform_device_count`` before any jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is
+    an outer data-parallel dim whose collectives ride the inter-pod DCN.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU tests (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

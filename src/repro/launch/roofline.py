@@ -1,0 +1,194 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Terms (per EXPERIMENTS.md SSRoofline, TPU v5e constants):
+    compute    = HLO_FLOPs / (chips x 197e12 FLOP/s)      [bf16 MXU]
+    memory     = HLO_bytes / (chips x 819e9 B/s)          [HBM]
+    collective = collective_bytes / (chips x 50e9 B/s)    [ICI per link]
+
+``compiled.cost_analysis()`` supplies FLOPs / bytes-accessed.
+Collective bytes are NOT in cost_analysis: we parse the *partitioned*
+HLO text and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (shapes in the
+partitioned module are already per-device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link (we charge one link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+#: ops whose operands ride the interconnect
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_TOKEN_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int = 0
+    by_op: dict = dataclasses.field(default_factory=dict)
+    n_ops: int = 0
+
+    def combine(self, other: "CollectiveStats", scale: float = 1.0
+                ) -> "CollectiveStats":
+        by_op = dict(self.by_op)
+        for k, v in other.by_op.items():
+            by_op[k] = by_op.get(k, 0) + int(v * scale)
+        return CollectiveStats(
+            total_bytes=self.total_bytes
+            + int(other.total_bytes * scale),
+            by_op=by_op,
+            n_ops=self.n_ops + other.n_ops)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveStats:
+    """Sum per-device payload bytes of every collective op instance.
+
+    HLO line format: ``%name = <result-shape> all-reduce(...)`` - the
+    result shape(s) sit between '=' and the op name (shapes in the
+    partitioned module are per-device).  For all-reduce the result
+    equals the operand; for all-gather the result is the gathered
+    buffer (a conservative upper bound on link traffic); reduce-scatter
+    results are the scattered shard (ring traffic ~= (n-1)/n of the
+    unscattered operand - we record the result shape and note the
+    approximation).
+
+    NOTE: collectives inside a scanned superblock appear once in the
+    HLO; the dry-run extrapolates by trip count (see
+    ``extrapolate_body``)."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "=" not in line or "-done(" in line:
+            continue  # async pairs: count the -start only
+        rhs = line.split("=", 1)[1]
+        m = _OP_TOKEN_RE.search(rhs)
+        if not m:
+            continue
+        op = m.group(1)
+        head = rhs[: m.start()]  # result shape(s) precede the op name
+        nbytes = sum(_shape_bytes(dt, dims)
+                     for dt, dims in _SHAPE_RE.findall(head))
+        stats.total_bytes += nbytes
+        stats.n_ops += 1
+        stats.by_op[op] = stats.by_op.get(op, 0) + nbytes
+    return stats
+
+
+def extrapolate_body(c1: CollectiveStats, c2: CollectiveStats,
+                     n_super: int) -> CollectiveStats:
+    """Scan-body correction: compile the model at 1 and 2 superblocks;
+    (c2 - c1) is one body's collectives, so the full model is
+    c1 + body * (n_super - 1)."""
+    body = CollectiveStats(
+        total_bytes=max(0, c2.total_bytes - c1.total_bytes),
+        by_op={k: max(0, c2.by_op.get(k, 0) - c1.by_op.get(k, 0))
+               for k in set(c1.by_op) | set(c2.by_op)},
+        n_ops=max(0, c2.n_ops - c1.n_ops))
+    return c1.combine(body, scale=float(n_super - 1))
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    analytic_gflops: float         # whole step, all chips (primary)
+    analytic_hbm_gbytes_dev: float
+    collective_gbytes: float       # per-device, HLO-derived
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_gflops: float            # 6*N_active*D (2*N for inference)
+    useful_ratio: float            # model / analytic total
+    roofline_fraction: float       # bound_time share vs sum of terms
+    hlo_raw: dict                  # raw cost_analysis (see caveat)
+    bytes_per_device: dict
+    collective_by_op: dict
+    flops_by_part: dict
+    bytes_by_part: dict
+    note: str = ""
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def build_report(*, arch: str, shape: str, mesh_name: str, n_chips: int,
+                 analytic, cost: dict, mem: dict, coll: CollectiveStats,
+                 model_flops: float, note: str = "") -> RooflineReport:
+    """analytic: launch.analytic.CostBreakdown (primary compute/memory
+    terms - XLA cost_analysis counts while-bodies once, see analytic.py);
+    cost: raw compiled.cost_analysis() recorded for transparency;
+    coll: HLO-parsed collective payloads (superblock-extrapolated)."""
+    compute_s = analytic.flops_total / n_chips / PEAK_FLOPS
+    memory_s = analytic.hbm_bytes_per_chip / HBM_BW
+    collective_s = coll.total_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        analytic_gflops=analytic.flops_total / 1e9,
+        analytic_hbm_gbytes_dev=analytic.hbm_bytes_per_chip / 1e9,
+        collective_gbytes=coll.total_bytes / 1e9,
+        compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant,
+        model_gflops=model_flops / 1e9,
+        useful_ratio=(model_flops / analytic.flops_total
+                      if analytic.flops_total else 0.0),
+        roofline_fraction=(bound / max(sum(terms.values()), 1e-30)),
+        hlo_raw={k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        bytes_per_device=mem, collective_by_op=coll.by_op,
+        flops_by_part=analytic.flops_by_part,
+        bytes_by_part=analytic.bytes_by_part,
+        note=note)
+
+
+def model_flops_for(cfg, shape_cfg, n_params_active: int) -> float:
+    """MODEL_FLOPS: 6*N*D for training (fwd+bwd), 2*N*D for inference
+    fwd; D = processed tokens for the step being lowered."""
+    if shape_cfg.kind == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        if cfg.family == "audio":
+            tokens = shape_cfg.global_batch * (
+                shape_cfg.seq_len + max(128, shape_cfg.seq_len // 4))
+        return 6.0 * n_params_active * tokens
+    if shape_cfg.kind == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params_active * shape_cfg.global_batch

@@ -1,0 +1,70 @@
+"""Coherent multi-agent serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b \
+        --agents 4 --artifacts 3 --steps 40 --volatility 0.1 \
+        --strategy lazy
+
+Runs the coherence-gated serving system (reduced backbone on CPU) under
+the paper's SS8.1 workload and reports token + prefill-FLOPs savings vs
+the rebroadcast baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import models
+from repro.configs import ARCHS, n_active_params, smoke_config
+from repro.runtime.coherent_serving import (CoherentServingSystem,
+                                            run_workload)
+
+
+def build_artifacts(m: int, tokens: int) -> dict:
+    return {f"artifact-{i}": list(range(1, tokens + 1)) for i in range(m)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=sorted(ARCHS))
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--artifacts", type=int, default=3)
+    ap.add_argument("--artifact-tokens", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--volatility", type=float, default=0.10)
+    ap.add_argument("--strategy", default="lazy",
+                    choices=["lazy", "eager", "access_count"])
+    ap.add_argument("--volatility-sorted", action="store_true",
+                    help="beyond-paper prefix layout optimization")
+    ap.add_argument("--materialize", action="store_true",
+                    help="run a real prefill through the backbone")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    n_active = n_active_params(ARCHS[args.arch])
+    system = CoherentServingSystem(
+        cfg, args.agents,
+        build_artifacts(args.artifacts, args.artifact_tokens),
+        strategy=args.strategy,
+        volatility_sorted=args.volatility_sorted,
+        n_active_params=n_active)
+    stats = run_workload(system, args.steps, args.volatility)
+    print(f"strategy={args.strategy} sorted={args.volatility_sorted}")
+    print(f"  prefill tokens:   {stats.prefill_tokens:,} vs broadcast "
+          f"{stats.broadcast_tokens:,} -> "
+          f"savings {stats.token_savings:.1%}")
+    print(f"  prefill FLOPs:    {stats.prefill_flops:.3e} vs broadcast "
+          f"{stats.broadcast_flops:.3e} -> "
+          f"savings {stats.flops_savings:.1%}  "
+          f"(@{n_active / 1e9:.2f}B active params)")
+    print(f"  fetches={stats.fetches} cache_hits={stats.cache_hits}")
+    if args.materialize:
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        logits = system.materialize_prefill(params, 0)
+        print(f"  materialized prefill logits: {logits.shape} "
+              f"(finite={bool(jax.numpy.isfinite(logits).all())})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --smoke --steps 50 --ckpt-dir /tmp/ckpt
+
+``--smoke`` swaps in the reduced same-family config (CPU-runnable);
+without it the full config is used (requires a real TPU slice - on this
+container use the dry-run instead).  The loop auto-resumes from the
+newest checkpoint in --ckpt-dir, so re-running after a crash continues
+where it left off (fault tolerance demo: --crash-at N).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCHS, get, smoke_config
+from repro.data import DataConfig
+from repro.runtime.train_loop import TrainLoopConfig, run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="inject a crash at this step (FT demo)")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get(args.arch)
+    loop = TrainLoopConfig(total_steps=args.steps,
+                           checkpoint_every=args.ckpt_every)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.batch)
+    report = run_training(cfg, loop, args.ckpt_dir, data_cfg=data,
+                          crash_at_step=args.crash_at)
+    print(f"arch={cfg.name} steps_run={report.steps_run} "
+          f"resumed_from={report.resumed_from} "
+          f"first_loss={report.losses[0]:.4f} "
+          f"last_loss={report.losses[-1]:.4f} "
+          f"checkpoints={report.checkpoints}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Config-driven model zoo (pure JAX, pytree params)."""
+
+from repro.models.transformer import (init_params, forward_train, prefill,
+                                      decode_step, init_cache, encode,
+                                      layer_specs, split_pattern)
+from repro.models.common import params_count, params_bytes
+
+__all__ = ["init_params", "forward_train", "prefill", "decode_step",
+           "init_cache", "encode", "layer_specs", "split_pattern",
+           "params_count", "params_bytes"]

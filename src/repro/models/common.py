@@ -1,0 +1,176 @@
+"""Shared model building blocks (pure JAX, flax-free pytree params).
+
+Every block is a pair of functions: ``<block>_init(key, ...) -> params``
+and ``<block>_apply(params, x, ...) -> y``.  Params are plain nested
+dicts so pjit sharding rules can pattern-match on path names.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+def dtype_of(name: str):
+    return DTYPES[name]
+
+
+# ------------------------------ init ---------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ------------------------------ norms --------------------------------
+
+def norm_init(d: int, kind: str, dtype, use_bias: bool = False):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm" and use_bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+    else:  # layernorm
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y.astype(x.dtype) * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+# ------------------------------ rope ---------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float = 10000.0):
+    """positions: (...,) int -> (cos, sin) of shape (..., head_dim/2)."""
+    freqs = 1.0 / (theta ** (
+        jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_apply(x: jax.Array, cos: jax.Array, sin: jax.Array):
+    """x: (..., L, H, D) or (..., L, D); cos/sin: (..., L, D/2)
+    broadcastable after head-dim insertion."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    if x.ndim == cos.ndim + 1:     # (..., L, H, D) vs (..., L, D/2)
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    rot1 = x1 * cos - x2 * sin
+    rot2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rot1, rot2], axis=-1).astype(x.dtype)
+
+
+# --------------------------- activations ------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu,
+            "relu2": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+# ------------------------------ MLP ----------------------------------
+
+def glu_mlp_init(key, d_model: int, d_ff: int, dtype,
+                 use_bias: bool = False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_gate": dense_init(k1, d_model, d_ff, dtype),
+         "w_up": dense_init(k2, d_model, d_ff, dtype),
+         "w_down": dense_init(k3, d_ff, d_model, dtype)}
+    if use_bias:
+        p["b_gate"] = jnp.zeros((d_ff,), dtype)
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def glu_mlp_apply(p, x, act: str = "silu"):
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    if "b_gate" in p:
+        g = g + p["b_gate"]
+        u = u + p["b_up"]
+    y = act_fn(act)(g) * u
+    y = y @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, use_bias: bool = True):
+    """Plain 2-layer MLP (whisper-style)."""
+    k1, k2 = jax.random.split(key)
+    p = {"w_in": dense_init(k1, d_model, d_ff, dtype),
+         "w_out": dense_init(k2, d_ff, d_model, dtype)}
+    if use_bias:
+        p["b_in"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp_apply(p, x, act: str = "gelu"):
+    y = x @ p["w_in"]
+    if "b_in" in p:
+        y = y + p["b_in"]
+    y = act_fn(act)(y)
+    y = y @ p["w_out"]
+    if "b_out" in p:
+        y = y + p["b_out"]
+    return y
+
+
+# ------------------------------ loss ----------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross-entropy in fp32.  logits (..., V), labels
+    (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# --------------------------- param stacking ---------------------------
+
+def stack_layers(key, n: int, init_fn):
+    """Initialize n structurally-identical layers and stack each leaf on
+    a leading layer axis - the scan-over-layers representation that keeps
+    the HLO size depth-independent."""
+    keys = jax.random.split(key, n)
+    layers = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layers)
+
+
+def params_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree.leaves(params))
+
+
+def params_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

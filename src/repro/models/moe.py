@@ -1,0 +1,143 @@
+"""Mixture-of-Experts FFN with fixed-capacity scatter dispatch.
+
+Expert-parallel-friendly formulation: tokens are scattered into a
+(E, capacity, d) buffer, the expert GLU runs as a single batched einsum
+over the expert dim (shardable over the mesh 'model' axis = EP), and
+results are gathered back with the router gate weights.  Dropped tokens
+(capacity overflow) pass through the residual, standard Switch/GShard
+semantics.  FLOPs scale with *active* parameters (top-k), which is what
+MODEL_FLOPS = 6*N_active*D accounting expects.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.common import act_fn, dense_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, m.n_experts, dtype, scale=0.1),
+        "expert_gate": _experts(ks[1], m.n_experts, d, m.d_expert,
+                                dtype),
+        "expert_up": _experts(ks[2], m.n_experts, d, m.d_expert, dtype),
+        "expert_down": _experts(ks[3], m.n_experts, m.d_expert, d,
+                                dtype, transpose=True),
+    }
+    if m.n_shared:
+        p["shared_gate"] = dense_init(ks[4], d, m.n_shared * m.d_expert,
+                                      dtype)
+        k5, k6 = jax.random.split(ks[4])
+        p["shared_up"] = dense_init(k5, d, m.n_shared * m.d_expert, dtype)
+        p["shared_down"] = dense_init(k6, m.n_shared * m.d_expert, d,
+                                      dtype)
+    return p
+
+
+def _experts(key, e, d_in, d_out, dtype, transpose=False):
+    import math
+    std = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (e, d_in, d_out), jnp.float32)
+            * std).astype(dtype)
+
+
+def _dispatch_one_slice(p, m: MoEConfig, xt, act: str, capacity: int):
+    """Route one dispatch slice of tokens (T_loc, d) -> (y, probs, sel).
+
+    All gathers/scatters here stay within the slice, so when slices are
+    laid out one-per-data-shard the dispatch needs NO cross-shard
+    communication; only the expert einsum (E sharded over 'model') and
+    the final combine all-reduce touch the interconnect."""
+    t, d = xt.shape
+    logits = (xt @ p["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, m.top_k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    # keep the combine chain in bf16: the (T*k, d) gathered-token tensor
+    # rides the expert->token all-to-all, and an fp32 gate cotangent
+    # doubles that payload (SSPerf iter 9: 13.2 -> ~6.6 GB/device).
+    gate_vals = gate_vals.astype(xt.dtype)
+
+    # position of each (token, slot) within its expert's buffer
+    sel = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.int32)  # (T,k,E)
+    sel_flat = sel.reshape(t * m.top_k, m.n_experts)
+    pos = jnp.cumsum(sel_flat, axis=0) - sel_flat            # (T*k, E)
+    pos_in_e = jnp.sum(pos * sel_flat, axis=-1)              # (T*k,)
+    expert_of = idx.reshape(-1)                              # (T*k,)
+    keep = pos_in_e < capacity
+
+    # scatter tokens into (E*C, d) - slice-local
+    slot = expert_of * capacity + jnp.minimum(pos_in_e, capacity - 1)
+    token_of = jnp.repeat(jnp.arange(t), m.top_k)
+    buf = jnp.zeros((m.n_experts * capacity, d), xt.dtype)
+    buf = buf.at[slot].add(
+        jnp.where(keep[:, None], xt[token_of], 0))
+    buf = buf.reshape(m.n_experts, capacity, d)
+
+    # batched expert GLU (EP-shardable einsum over the expert dim)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["expert_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["expert_up"])
+    h = act_fn(act)(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["expert_down"])
+    out = out.reshape(m.n_experts * capacity, d)
+
+    # gather back with gate weights (combine: all-reduce over 'model')
+    contrib = out[slot] * jnp.where(
+        keep, gate_vals.reshape(-1), 0.0)[:, None].astype(out.dtype)
+    y = jnp.zeros_like(xt).at[token_of].add(contrib)
+    return y, probs, sel
+
+
+def moe_apply(p, cfg: ModelConfig, x, act: str = "silu"):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    With ``dispatch_slices == n`` the flat token stream is viewed as
+    (n, T/n, d) - matching the DP sharding of the batch - and routing is
+    vmapped per slice with per-slice capacity.  This removes the
+    (E, C, d) dispatch-buffer partial-sum across the data axis that
+    dominates MoE collectives under plain SPMD scatter (measured:
+    43.7 GB/device/step all-reduce on olmoe-1b-7b train_4k)."""
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    n_slices = max(1, m.dispatch_slices)
+    if t % n_slices:
+        n_slices = 1
+    t_loc = t // n_slices
+    capacity = int(m.capacity_factor * m.top_k * t_loc / m.n_experts)
+    capacity = max(capacity, m.top_k)
+
+    if n_slices == 1:
+        y, probs, sel = _dispatch_one_slice(p, m, xt, act, capacity)
+    else:
+        xs = xt.reshape(n_slices, t_loc, d)
+        if m.dispatch_axes:
+            xs = jax.lax.with_sharding_constraint(
+                xs, jax.sharding.PartitionSpec(
+                    tuple(m.dispatch_axes), None, None))
+        y, probs, sel = jax.vmap(
+            lambda xt_loc: _dispatch_one_slice(p, m, xt_loc, act,
+                                               capacity))(xs)
+        y = y.reshape(t, d)
+        probs = probs.reshape(t, m.n_experts)
+        sel = sel.reshape(t, m.top_k, m.n_experts)
+
+    if m.n_shared:
+        sg = xt @ p["shared_gate"]
+        su = xt @ p["shared_up"]
+        y = y + (act_fn(act)(sg) * su) @ p["shared_down"]
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=0)                                  # (E,)
+    ce = (sel.sum(axis=1) > 0).astype(jnp.float32).mean(axis=0)
+    aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+    return y.reshape(b, s, d), aux

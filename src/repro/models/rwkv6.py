@@ -1,0 +1,168 @@
+"""RWKV-6 "Finch" block: attention-free time-mix with data-dependent
+decay (arXiv:2404.05892) + squared-ReLU channel-mix.
+
+Structure per layer:
+  time-mix: token-shift ddlerp (low-rank data-dependent interpolation
+  between x_t and x_{t-1}) produces r, k, v, w, g; the WKV recurrence
+  carries a per-head (head_dim x head_dim) state with per-channel
+  data-dependent decay w_t and a "bonus" u for the current token.
+  channel-mix: token-shift lerp, relu^2 key, receptance-gated value.
+
+State per layer is O(1) in sequence length (one token-shift vector per
+mix + the WKV matrix state), which is what qualifies this arch for the
+long_500k decode shape.  Scan is chunk-checkpointed like the Mamba
+block.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RWKVConfig
+from repro.models.common import dense_init, norm_apply, norm_init
+
+
+class RWKVState(NamedTuple):
+    tm_shift: jax.Array   # (B, d) last token seen by time-mix
+    cm_shift: jax.Array   # (B, d) last token seen by channel-mix
+    wkv: jax.Array        # (B, H, dh, dh) fp32 recurrence state
+
+
+def _dims(cfg: ModelConfig):
+    r: RWKVConfig = cfg.rwkv
+    n_heads = cfg.d_model // r.head_size
+    return r, n_heads, r.head_size
+
+
+def rwkv_time_mix_init(key, cfg: ModelConfig, dtype):
+    r, h, dh = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    p = {
+        # ddlerp base mixing coefficients (5 streams: r,k,v,w,g)
+        "mix_base": (jax.random.uniform(ks[0], (5, d), jnp.float32)
+                     ).astype(jnp.float32),
+        "mix_lora_a": dense_init(ks[1], d, 5 * r.mix_lora, dtype),
+        "mix_lora_b": (jax.random.normal(
+            ks[2], (5, r.mix_lora, d), jnp.float32) * 0.01).astype(dtype),
+        "w_r": dense_init(ks[3], d, d, dtype),
+        "w_k": dense_init(ks[4], d, d, dtype),
+        "w_v": dense_init(ks[5], d, d, dtype),
+        "w_g": dense_init(ks[6], d, d, dtype),
+        "w_o": dense_init(ks[7], d, d, dtype),
+        # data-dependent decay: w_t = exp(-exp(decay_base + lora(x)))
+        "decay_base": (jax.random.uniform(
+            ks[8], (d,), jnp.float32, -8.0, -5.0)),
+        "decay_lora_a": dense_init(ks[9], d, r.decay_lora, dtype),
+        "decay_lora_b": (jax.random.normal(
+            ks[10], (r.decay_lora, d), jnp.float32) * 0.01).astype(dtype),
+        "bonus": (jax.random.normal(ks[11], (h, dh), jnp.float32) * 0.1),
+        "ln_x": norm_init(d, "rmsnorm", dtype),  # group-norm stand-in
+    }
+    return p
+
+
+def rwkv_channel_mix_init(key, cfg: ModelConfig, dtype):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "w_k": dense_init(ks[0], d, dff, dtype),
+        "w_v": dense_init(ks[1], dff, d, dtype),
+        "w_r": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _token_shift(x, last):
+    """x: (B,T,d); last: (B,d) -> x_{t-1} stream + new last."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev, x[:, -1, :]
+
+
+def _wkv_step(h, r_t, k_t, v_t, w_t, bonus):
+    """h: (B,H,dh,dh); r/k/v/w: (B,H,dh).  Returns (h', y_t (B,H,dh))."""
+    kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,dh,dh)
+    y = jnp.einsum("bhk,bhkv->bhv", r_t, h + bonus[..., :, None] * kv)
+    h = w_t[..., :, None] * h + kv
+    return h, y
+
+
+def rwkv_time_mix_apply(p, cfg: ModelConfig, x,
+                        tm_shift=None, wkv_state=None):
+    r, n_h, dh = _dims(cfg)
+    b, t, d = x.shape
+    if tm_shift is None:
+        tm_shift = jnp.zeros((b, d), x.dtype)
+    prev, new_shift = _token_shift(x, tm_shift)
+
+    # ddlerp: data-dependent interpolation between x_t and x_{t-1}
+    delta = prev - x
+    lora = jax.nn.tanh(x @ p["mix_lora_a"]).reshape(b, t, 5, r.mix_lora)
+    dyn = jnp.einsum("btsr,srd->btsd", lora,
+                     p["mix_lora_b"].astype(x.dtype))
+    mix = jax.nn.sigmoid(p["mix_base"].astype(x.dtype) + dyn)  # (b,t,5,d)
+    xr, xk, xv, xw, xg = [x + delta * mix[:, :, i] for i in range(5)]
+
+    r_s = (xr @ p["w_r"]).reshape(b, t, n_h, dh).astype(jnp.float32)
+    k_s = (xk @ p["w_k"]).reshape(b, t, n_h, dh).astype(jnp.float32)
+    v_s = (xv @ p["w_v"]).reshape(b, t, n_h, dh).astype(jnp.float32)
+    g_s = jax.nn.silu(xg @ p["w_g"])
+
+    decay = (p["decay_base"].astype(jnp.float32)
+             + (jax.nn.tanh(xw @ p["decay_lora_a"])
+                @ p["decay_lora_b"]).astype(jnp.float32))
+    w_s = jnp.exp(-jnp.exp(decay)).reshape(b, t, n_h, dh)  # (0,1)
+
+    bonus = p["bonus"].astype(jnp.float32)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((b, n_h, dh, dh), jnp.float32)
+
+    if t == 1:
+        h, y = _wkv_step(wkv_state, r_s[:, 0], k_s[:, 0], v_s[:, 0],
+                         w_s[:, 0], bonus)
+        ys = y[:, None]
+    else:
+        chunk = min(cfg.rwkv.chunk, t)
+        assert t % chunk == 0
+        nc = t // chunk
+
+        def chunk_body(h, inp):
+            def step(h, s):
+                r_t, k_t, v_t, w_t = s
+                return _wkv_step(h, r_t, k_t, v_t, w_t, bonus)
+            return jax.lax.scan(step, h, inp)
+
+        def tm_(a):  # (b,t,h,dh) -> (nc, chunk, b, h, dh)
+            return a.swapaxes(0, 1).reshape(nc, chunk, b, n_h, dh)
+
+        h, ys = jax.lax.scan(jax.checkpoint(chunk_body), wkv_state,
+                             (tm_(r_s), tm_(k_s), tm_(v_s), tm_(w_s)))
+        ys = ys.reshape(t, b, n_h, dh).swapaxes(0, 1)
+
+    y = ys.reshape(b, t, d).astype(x.dtype)
+    y = norm_apply(p["ln_x"], y) * g_s
+    return y @ p["w_o"], new_shift, h
+
+
+def rwkv_channel_mix_apply(p, cfg: ModelConfig, x, cm_shift=None):
+    b, t, d = x.shape
+    if cm_shift is None:
+        cm_shift = jnp.zeros((b, d), x.dtype)
+    prev, new_shift = _token_shift(x, cm_shift)
+    xk = x + (prev - x) * p["mix_k"].astype(x.dtype)
+    xr = x + (prev - x) * p["mix_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), new_shift
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int) -> RWKVState:
+    r, n_h, dh = _dims(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return RWKVState(
+        tm_shift=jnp.zeros((batch, cfg.d_model), dt),
+        cm_shift=jnp.zeros((batch, cfg.d_model), dt),
+        wkv=jnp.zeros((batch, n_h, dh, dh), jnp.float32))

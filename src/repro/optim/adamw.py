@@ -1,0 +1,149 @@
+"""Pure-JAX AdamW with gradient clipping, schedules, and ZeRO-friendly
+state layout (optax-free: only pytree maps, so sharding rules can
+pattern-match optimizer state exactly like params).
+
+Distributed-optimization extras (used by the runtime):
+  * ``compress_grads`` - bf16 gradient representation with an fp32
+    error-feedback residual (1-bit-Adam-style compression generalized to
+    bf16): the all-reduce payload halves while the accumulated rounding
+    error is re-injected next step, keeping convergence unbiased.
+  * moments can be kept in bf16 (``moment_dtype``) for the 398B-class
+    models where fp32 moments alone exceed per-device HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"   # "bfloat16" for ZeRO-lite footprint
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict      # first moment, pytree like params
+    nu: dict      # second moment
+    error: Optional[dict] = None   # compression error feedback
+
+
+def init_state(cfg: AdamWConfig, params,
+               with_error_feedback: bool = False) -> AdamWState:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda dtype: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=zeros(dt), nu=zeros(dt),
+        error=zeros(jnp.float32) if with_error_feedback else None)
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+        grads), norm
+
+
+def compress_grads(grads, error):
+    """bf16 compression with fp32 error feedback.
+
+    Returns (compressed_bf16, new_error).  The all-reduce runs on the
+    bf16 payload; the representation error (g - bf16(g+e)) accumulates
+    into ``error`` and is re-added next step.
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        c = g32.astype(jnp.bfloat16)
+        return c, g32 - c.astype(jnp.float32)
+    pairs = jax.tree.map(one, grads, error)
+    comp = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_err
+
+
+_NO_DECAY_TOKENS = ("norm", "bias", "scale", "a_log", "dt_bias",
+                    "decay_base", "mix_base", "bonus", "gate")
+
+
+def _decay_mask(path: str) -> bool:
+    p = path.lower()
+    return not any(tok in p for tok in _NO_DECAY_TOKENS)
+
+
+def _tree_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            out[k] = _tree_paths(v, f"{prefix}/{k}")
+        return out
+    return prefix
+
+
+def apply_updates(cfg: AdamWConfig, params, grads,
+                  state: AdamWState):
+    """One AdamW step.  Returns (params, state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    paths = _tree_paths(params)
+
+    def upd(p, g, m, v, path):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return (new_p.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    triples = jax.tree.map(upd, params, grads, state.mu, state.nu, paths)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree.map(lambda t: t[0], triples, is_leaf=is3)
+    new_mu = jax.tree.map(lambda t: t[1], triples, is_leaf=is3)
+    new_nu = jax.tree.map(lambda t: t[2], triples, is_leaf=is3)
+    new_state = AdamWState(step=step, mu=new_mu, nu=new_nu,
+                           error=state.error)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

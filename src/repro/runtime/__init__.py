@@ -1,0 +1,12 @@
+"""Distributed runtime: sharding rules, step factories, loops, coherent
+multi-agent serving."""
+
+from repro.runtime import sharding, steps
+from repro.runtime.train_loop import (TrainLoopConfig, TrainReport,
+                                      run_training)
+from repro.runtime.coherent_serving import (CoherentServingSystem,
+                                            ServingStats, run_workload)
+
+__all__ = ["sharding", "steps", "TrainLoopConfig", "TrainReport",
+           "run_training", "CoherentServingSystem", "ServingStats",
+           "run_workload"]

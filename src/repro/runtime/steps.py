@@ -1,0 +1,184 @@
+"""Jitted step factories: train / prefill / decode, mesh-aware.
+
+``make_*`` return (jitted_fn, in_shardings, out_shardings) so callers
+(train loop, serving loop, dry-run) share one source of truth for the
+distribution strategy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.runtime import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    zero: bool = True                 # ZeRO-1 moment sharding
+    compress_grads: bool = False      # bf16 AR payload + error feedback
+    donate: bool = True
+    n_microbatches: int = 1           # gradient accumulation (memory)
+    fsdp: bool = False                # params over 'data' too (ZeRO-3)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    return tf.forward_train(params, cfg, batch)
+
+
+def microbatch_shape(batch_shape, n_micro: int):
+    """(B, ...) specs -> (n_micro, B/n_micro, ...) specs (host-side
+    pre-split layout; dim 0 is the scan dim and stays unsharded)."""
+    if n_micro <= 1:
+        return batch_shape
+
+    def one(x):
+        b = x.shape[0]
+        assert b % n_micro == 0
+        return jax.ShapeDtypeStruct(
+            (n_micro, b // n_micro) + tuple(x.shape[1:]), x.dtype)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def microbatch_split(batch, n_micro: int):
+    """Host-side batch pre-split matching microbatch_shape."""
+    if n_micro <= 1:
+        return batch
+    return jax.tree.map(
+        lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                            + tuple(x.shape[1:])), batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    mesh: Mesh, params_shape, batch_shape,
+                    options: StepOptions = StepOptions()):
+    """Returns (fn, in_shardings, out_shardings).
+
+    fn(params, opt_state, batch) -> (params, opt_state, metrics).
+    Gradient psum over DP axes is inserted by XLA SPMD (params are
+    replicated over DP, sharded over TP); ZeRO-1 shards moments over
+    'data' on top.
+    """
+    p_specs = (shd.fsdp_param_specs(params_shape, mesh) if options.fsdp
+               else shd.param_specs(params_shape))
+    o_specs = shd.opt_state_specs(params_shape, mesh, zero=options.zero)
+    nm = options.n_microbatches
+    b_specs = shd.batch_specs(microbatch_shape(batch_shape, nm), mesh,
+                              batch_dim=0 if nm <= 1 else 1)
+
+    def grad_of(params, batch):
+        if options.n_microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, cfg, batch)
+        # Gradient accumulation: the batch arrives PRE-SPLIT as
+        # (n_micro, B/n_micro, ...) with the microbatch dim unsharded
+        # (see microbatch_shape) - reshaping a dp-sharded batch inside
+        # the step would force an SPMD reshard/replication.  Grads
+        # accumulate in fp32.
+        nm = options.n_microbatches
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, cfg, mb)
+            g_acc = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32) / nm, g_acc, g)
+            return (loss_acc + loss / nm, g_acc), None
+
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero_g), batch)
+        return loss, grads
+
+    def step(params, opt_state, batch):
+        loss, grads = grad_of(params, batch)
+        if options.compress_grads and opt_state.error is not None:
+            grads, new_err = adamw.compress_grads(grads, opt_state.error)
+            opt_state = opt_state._replace(error=new_err)
+        params, opt_state, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    def opt_tree_specs():
+        return adamw.AdamWState(
+            step=P(), mu=o_specs, nu=o_specs,
+            error=(p_specs if options.compress_grads else None))
+
+    in_sh = (shd.to_named(p_specs, mesh),
+             shd.to_named(opt_tree_specs(), mesh),
+             shd.to_named(b_specs, mesh))
+    out_sh = (in_sh[0], in_sh[1], None)
+    fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0, 1) if options.donate else ())
+    return fn, in_sh, out_sh
+
+
+def value_and_grad_step(cfg: ModelConfig):
+    """Un-sharded train step for CPU smoke use."""
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+        params, opt_state, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, params_shape,
+                      batch_shape, cache_shape,
+                      options: StepOptions = StepOptions()):
+    p_specs = (shd.fsdp_param_specs(params_shape, mesh) if options.fsdp
+               else shd.param_specs(params_shape))
+    b_specs = shd.batch_specs(batch_shape, mesh)
+    c_specs = shd.cache_specs(cache_shape, cfg, mesh)
+
+    def step(params, batch, cache):
+        tokens = batch["tokens"]
+        ctx = batch.get("vision_embeds", batch.get("frames"))
+        logits, cache = tf.prefill(params, cfg, tokens, cache,
+                                   context=ctx)
+        return logits, cache
+
+    in_sh = (shd.to_named(p_specs, mesh), shd.to_named(b_specs, mesh),
+             shd.to_named(c_specs, mesh))
+    out_sh = (None, in_sh[2])
+    fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(2,))
+    return fn, in_sh, out_sh
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, params_shape,
+                     cache_shape,
+                     options: StepOptions = StepOptions()):
+    """serve_step: one new token against the KV cache (the decode_* and
+    long_* shapes lower THIS, not train_step)."""
+    p_specs = (shd.fsdp_param_specs(params_shape, mesh) if options.fsdp
+               else shd.param_specs(params_shape))
+    c_specs = shd.cache_specs(cache_shape, cfg, mesh)
+    tok_spec = shd.batch_specs(
+        {"token": jax.ShapeDtypeStruct(
+            (cache_shape["length"].shape[0], 1), jnp.int32)}, mesh)
+
+    def step(params, token, cache):
+        return tf.decode_step(params, cfg, token, cache)
+
+    in_sh = (shd.to_named(p_specs, mesh),
+             shd.to_named(tok_spec["token"], mesh),
+             shd.to_named(c_specs, mesh))
+    out_sh = (None, in_sh[2])
+    fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(2,))
+    return fn, in_sh, out_sh

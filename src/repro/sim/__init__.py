@@ -1,0 +1,22 @@
+"""Tick-based discrete-event simulation of artifact coherence (paper SS8)."""
+
+from repro.sim.scenarios import (
+    ScenarioConfig, SCENARIOS, CLIFF_VOLATILITIES, SCALING_AGENT_COUNTS,
+    SCALING_ARTIFACT_TOKENS, SCALING_STEPS, canonical, cliff_scenario,
+    agent_scaling_scenario, artifact_size_scenario, step_scaling_scenario,
+    pointer_semantics_scenario,
+)
+from repro.sim.engine import (
+    RunStats, RunResult, Comparison, run_scenario, compare,
+    sweep_volatility,
+)
+
+__all__ = [
+    "ScenarioConfig", "SCENARIOS", "CLIFF_VOLATILITIES",
+    "SCALING_AGENT_COUNTS", "SCALING_ARTIFACT_TOKENS", "SCALING_STEPS",
+    "canonical", "cliff_scenario", "agent_scaling_scenario",
+    "artifact_size_scenario", "step_scaling_scenario",
+    "pointer_semantics_scenario",
+    "RunStats", "RunResult", "Comparison", "run_scenario", "compare",
+    "sweep_volatility",
+]

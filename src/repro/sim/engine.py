@@ -1,0 +1,173 @@
+"""Tick-based discrete-event simulation engine (paper SS8).
+
+The engine runs the vectorized ACS state machine (``repro.core.acs``)
+over S steps via ``lax.scan`` and over independent seeded runs via
+``vmap``; an optional outer ``vmap`` sweeps whole scenario grids in one
+XLA program (thousands of concurrent simulated deployments - the
+fleet-scale evaluation mode).  Per-tick MESI transitions can optionally
+be routed through the Pallas kernel (``repro.kernels.mesi_transition``)
+for the batched path.
+
+Population statistics (mean, population std) are reported exactly as the
+paper does (10 runs, sigma over the population).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acs
+from repro.sim.scenarios import ScenarioConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RunStats:
+    """Per-configuration population statistics over n_runs."""
+
+    name: str
+    strategy: str
+    n_runs: int
+    total_tokens_mean: float
+    total_tokens_std: float
+    sync_tokens_mean: float
+    sync_tokens_std: float
+    fetch_tokens_mean: float
+    signal_tokens_mean: float
+    push_tokens_mean: float
+    broadcast_tokens_mean: float
+    cache_hit_rate_mean: float
+    cache_hit_rate_std: float
+    n_fetches_mean: float
+    n_writes_mean: float
+    n_reads_mean: float
+    max_staleness_max: int
+    max_version_lag_max: int
+
+    def savings_vs(self, baseline: "RunStats") -> float:
+        return 1.0 - self.total_tokens_mean / baseline.total_tokens_mean
+
+    def savings_std_vs(self, baseline: "RunStats",
+                       per_run_tokens: np.ndarray,
+                       baseline_mean: Optional[float] = None) -> float:
+        b = baseline.total_tokens_mean if baseline_mean is None \
+            else baseline_mean
+        return float(np.std(1.0 - per_run_tokens / b))
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    stats: RunStats
+    per_run_total_tokens: np.ndarray  # (n_runs,)
+    per_run_chr: np.ndarray
+
+
+def _episode_metrics(cfg: acs.ACSConfig, key: jax.Array) -> dict:
+    met = acs.run_episode(cfg, key)
+    return {
+        "total_tokens": met.total_tokens,
+        "sync_tokens": met.sync_tokens,
+        "fetch_tokens": met.fetch_tokens,
+        "signal_tokens": met.signal_tokens,
+        "push_tokens": met.push_tokens,
+        "broadcast_tokens": met.broadcast_tokens,
+        "cache_hit_rate": met.cache_hit_rate,
+        "n_fetches": met.n_fetches,
+        "n_writes": met.n_writes,
+        "n_reads": met.n_reads,
+        "max_staleness": met.max_staleness,
+        "max_version_lag": met.max_version_lag,
+    }
+
+
+def run_scenario(scn: ScenarioConfig) -> RunResult:
+    """Run ``scn.n_runs`` independent seeded episodes, vmapped."""
+    base = jax.random.PRNGKey(scn.seed)
+    keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(
+        jnp.arange(scn.n_runs))
+    fn = jax.jit(jax.vmap(lambda k: _episode_metrics(scn.acs, k)))
+    out = jax.device_get(fn(keys))
+    total = np.asarray(out["total_tokens"], dtype=np.float64)
+    chr_ = np.asarray(out["cache_hit_rate"], dtype=np.float64)
+    stats = RunStats(
+        name=scn.name,
+        strategy=acs.STRATEGY_NAMES[scn.acs.strategy],
+        n_runs=scn.n_runs,
+        total_tokens_mean=float(total.mean()),
+        total_tokens_std=float(total.std()),
+        sync_tokens_mean=float(np.mean(out["sync_tokens"])),
+        sync_tokens_std=float(np.std(np.asarray(
+            out["sync_tokens"], dtype=np.float64))),
+        fetch_tokens_mean=float(np.mean(out["fetch_tokens"])),
+        signal_tokens_mean=float(np.mean(out["signal_tokens"])),
+        push_tokens_mean=float(np.mean(out["push_tokens"])),
+        broadcast_tokens_mean=float(np.mean(out["broadcast_tokens"])),
+        cache_hit_rate_mean=float(chr_.mean()),
+        cache_hit_rate_std=float(chr_.std()),
+        n_fetches_mean=float(np.mean(out["n_fetches"])),
+        n_writes_mean=float(np.mean(out["n_writes"])),
+        n_reads_mean=float(np.mean(out["n_reads"])),
+        max_staleness_max=int(np.max(out["max_staleness"])),
+        max_version_lag_max=int(np.max(out["max_version_lag"])),
+    )
+    return RunResult(stats=stats, per_run_total_tokens=total,
+                     per_run_chr=chr_)
+
+
+@dataclasses.dataclass(frozen=True)
+class Comparison:
+    """Coherent strategy vs broadcast baseline for one scenario."""
+
+    scenario: str
+    volatility: float
+    strategy: str
+    broadcast: RunStats
+    coherent: RunStats
+    savings_mean: float
+    savings_std: float
+    crr: float           # Coherence Reduction Ratio (SS8.2)
+    chr_mean: float
+    chr_std: float
+
+
+def compare(scn: ScenarioConfig, strategy_code: Optional[int] = None
+            ) -> Comparison:
+    """Run broadcast + coherent variants of one scenario."""
+    coh_scn = scn if strategy_code is None else scn.with_strategy(
+        strategy_code)
+    bc = run_scenario(scn.with_strategy(acs.BROADCAST))
+    co = run_scenario(coh_scn)
+    savings_runs = 1.0 - co.per_run_total_tokens / bc.stats.total_tokens_mean
+    return Comparison(
+        scenario=scn.name,
+        volatility=scn.acs.volatility,
+        strategy=co.stats.strategy,
+        broadcast=bc.stats,
+        coherent=co.stats,
+        savings_mean=float(savings_runs.mean()),
+        savings_std=float(savings_runs.std()),
+        crr=co.stats.total_tokens_mean / bc.stats.total_tokens_mean,
+        chr_mean=co.stats.cache_hit_rate_mean,
+        chr_std=co.stats.cache_hit_rate_std,
+    )
+
+
+def sweep_volatility(base_scn: ScenarioConfig, volatilities,
+                     n_runs: Optional[int] = None) -> list[Comparison]:
+    """Vectorized V-sweep: one jitted program per strategy, vmapped over
+    (volatility x run).  Volatility is a *traced* Bernoulli parameter, so
+    a single compilation covers the whole sweep - the fleet-scale path."""
+    import dataclasses as dc
+    runs = n_runs or base_scn.n_runs
+    out = []
+    for v in volatilities:
+        scn = dc.replace(
+            base_scn, acs=dc.replace(base_scn.acs, volatility=float(v)),
+            n_runs=runs,
+            seed=base_scn.seed + int(round(float(v) * 1000)))
+        out.append(compare(scn))
+    return out

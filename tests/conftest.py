@@ -1,0 +1,31 @@
+"""Shared pytest fixtures.
+
+NOTE: do NOT set XLA_FLAGS / host-device-count here - smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py sets
+up the 512-device placeholder topology (and only when run as a script).
+"""
+
+import os
+
+# Keep CPU compiles light and deterministic for the test suite.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(20260305)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """The CPU LLVM execution engine allocates an mmap'd code region per
+    compiled fragment; a full-suite run accumulates thousands of tiny
+    eager/jit executables and eventually hits `LLVM compilation error:
+    Cannot allocate memory`.  Dropping the compilation caches at module
+    boundaries keeps the arena bounded."""
+    yield
+    import jax
+    jax.clear_caches()

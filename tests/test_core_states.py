@@ -1,0 +1,47 @@
+"""Unit tests for the MESI state encoding and transition table."""
+
+import numpy as np
+import pytest
+
+from repro.core.states import (CoherenceEvent, MESIState, TRANSITION_TABLE,
+                               is_valid, transition)
+
+
+def test_state_encoding_orders_validity():
+    # T(I)=0; T(S)=T(E)=T(M)=1 via the >= S trick used everywhere
+    assert not is_valid(MESIState.I)
+    for s in (MESIState.S, MESIState.E, MESIState.M):
+        assert is_valid(s)
+
+
+def test_mesi_transition_table_matches_protocol():
+    # read causes I -> S only via fetch; reads from valid states self-loop
+    assert transition(MESIState.S, CoherenceEvent.LOCAL_READ) == MESIState.S
+    assert transition(MESIState.I, CoherenceEvent.FETCH) == MESIState.S
+    # write causes S -> M via upgrade (S->E) then local write (E->M)
+    e = transition(MESIState.S, CoherenceEvent.UPGRADE)
+    assert e == MESIState.E
+    assert transition(e, CoherenceEvent.LOCAL_WRITE) == MESIState.M
+    # commit publishes: M -> S
+    assert transition(MESIState.M, CoherenceEvent.COMMIT) == MESIState.S
+    # remote write invalidates every state
+    for s in MESIState:
+        assert transition(s, CoherenceEvent.REMOTE_WRITE) == MESIState.I
+
+
+def test_illegal_transitions_raise():
+    with pytest.raises(ValueError):
+        transition(MESIState.I, CoherenceEvent.LOCAL_READ)
+    with pytest.raises(ValueError):
+        transition(MESIState.I, CoherenceEvent.LOCAL_WRITE)
+    with pytest.raises(ValueError):
+        transition(MESIState.S, CoherenceEvent.LOCAL_WRITE)  # needs upgrade
+
+
+def test_table_shape_and_legality_pattern():
+    assert TRANSITION_TABLE.shape == (4, 6)
+    legal = TRANSITION_TABLE >= 0
+    # exactly the protocol's legal (state, event) pairs
+    assert int(legal.sum()) == 13
+    assert (TRANSITION_TABLE[legal] <= int(MESIState.M)).all()
+    assert (np.diff(np.sort(np.unique(TRANSITION_TABLE))) > 0).all()

@@ -1,0 +1,135 @@
+"""Dry-run machinery tests on the single-CPU host mesh.
+
+The full 512-device dry-run is exercised by ``repro.launch.dryrun`` (see
+EXPERIMENTS.md SSDry-run); here we validate the same lowering path - step
+factories, sharding specs, ShapeDtypeStruct plumbing, collective parser,
+analytic cost model - end to end on a 1x1 mesh so it runs in seconds.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (SHAPES, get, input_specs, n_active_params,
+                           shapes_for, smoke_config)
+from repro.launch import analytic as an
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.runtime import steps as step_factories
+
+
+def test_host_mesh_lowering_train_step():
+    cfg = smoke_config("qwen3-1.7b")
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: tf.init_params(cfg, k), key)
+    batch_shape = {
+        "tokens": jax.ShapeDtypeStruct((2, 16), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((2, 16), jnp.int32)}
+    opt_cfg = adamw.AdamWConfig()
+    opt_shape = jax.eval_shape(
+        lambda: adamw.init_state(opt_cfg, params_shape))
+    with mesh:
+        fn, in_sh, _ = step_factories.make_train_step(
+            cfg, opt_cfg, mesh, params_shape, batch_shape)
+        lowered = fn.lower(params_shape, opt_shape, batch_shape)
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    assert ma.temp_size_in_bytes > 0
+    cost = compiled.cost_analysis()
+    assert cost.get("flops", 0) > 0
+
+
+@pytest.mark.parametrize("shape_name", ["decode_32k"])
+def test_host_mesh_lowering_decode_step(shape_name):
+    cfg = smoke_config("gemma-2b")
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: tf.init_params(cfg, k), key)
+    cache_shape = jax.eval_shape(lambda: tf.init_cache(cfg, 2, 64))
+    with mesh:
+        fn, in_sh, _ = step_factories.make_decode_step(
+            cfg, mesh, params_shape, cache_shape)
+        lowered = fn.lower(
+            params_shape,
+            jax.ShapeDtypeStruct((2, 1), jnp.int32), cache_shape)
+        compiled = lowered.compile()
+    assert compiled.cost_analysis().get("flops", 0) > 0
+
+
+class TestCollectiveParser:
+    def test_parses_result_shapes(self):
+        hlo = """
+  %ar = bf16[16,512]{1,0} all-reduce(bf16[16,512]{1,0} %x), replica_groups={}
+  %ag.1 = f32[4,128]{1,0} all-gather(f32[1,128]{1,0} %y), dimensions={0}
+  %nope = bf16[2,2]{1,0} add(bf16[2,2] %a, bf16[2,2] %b)
+"""
+        stats = rf.collective_bytes_from_hlo(hlo)
+        assert stats.n_ops == 2
+        assert stats.by_op["all-reduce"] == 16 * 512 * 2
+        assert stats.by_op["all-gather"] == 4 * 128 * 4
+
+    def test_async_pairs_counted_once(self):
+        hlo = """
+  %s = (bf16[8]{0}, bf16[8]{0}) all-reduce-start(bf16[8]{0} %x)
+  %d = bf16[8]{0} all-reduce-done((bf16[8], bf16[8]) %s)
+"""
+        stats = rf.collective_bytes_from_hlo(hlo)
+        assert stats.n_ops == 1
+
+    def test_extrapolation(self):
+        c1 = rf.CollectiveStats(total_bytes=100,
+                                by_op={"all-reduce": 100}, n_ops=2)
+        c2 = rf.CollectiveStats(total_bytes=160,
+                                by_op={"all-reduce": 160}, n_ops=3)
+        out = rf.extrapolate_body(c1, c2, n_super=10)
+        assert out.total_bytes == 100 + 60 * 9
+
+
+class TestAnalyticCost:
+    def test_dense_train_close_to_6nd(self):
+        """For a dense LM the analytic total ~ 6*N*D + attention."""
+        cfg = get("yi-9b")
+        shape = SHAPES["train_4k"]
+        cost = an.analytic_cost(cfg, shape, 256)
+        n = 8.83e9
+        tokens = 256 * 4096
+        six_nd = 6 * n * tokens
+        assert 0.9 * six_nd < cost.flops_total < 1.6 * six_nd
+
+    def test_moe_counts_active_params_only(self):
+        cfg = get("olmoe-1b-7b")
+        shape = SHAPES["train_4k"]
+        cost = an.analytic_cost(cfg, shape, 256)
+        total6nd = 6 * 6.92e9 * 256 * 4096       # all experts
+        active6nd = 6 * n_active_params(cfg) * 256 * 4096
+        assert cost.flops_total < 0.6 * total6nd
+        assert cost.flops_total > 0.8 * active6nd
+
+    def test_decode_is_memory_bound(self):
+        cfg = get("command-r-35b")
+        cost = an.analytic_cost(cfg, SHAPES["decode_32k"], 256)
+        compute_s = cost.flops_total / 256 / rf.PEAK_FLOPS
+        memory_s = cost.hbm_bytes_per_chip / rf.HBM_BW
+        assert memory_s > compute_s  # decode streams weights + KV
+
+    def test_long_context_shapes_only_for_sub_quadratic(self):
+        names = {s.name for s in shapes_for(get("rwkv6-1.6b"))}
+        assert "long_500k" in names
+        names = {s.name for s in shapes_for(get("yi-9b"))}
+        assert "long_500k" not in names
+
+    def test_input_specs_no_allocation(self):
+        """input_specs must return ShapeDtypeStructs (zero allocation)."""
+        for arch in ("gemma-2b", "jamba-1.5-large-398b",
+                     "whisper-medium", "llama-3.2-vision-90b"):
+            cfg = get(arch)
+            for shape in shapes_for(cfg):
+                specs = input_specs(cfg, shape)
+                for leaf in jax.tree.leaves(
+                        specs, is_leaf=lambda x: isinstance(
+                            x, jax.ShapeDtypeStruct)):
+                    assert isinstance(leaf, jax.ShapeDtypeStruct), (
+                        arch, shape.name)

@@ -1,0 +1,229 @@
+"""Message-level CCS protocol tests: safety, recovery, idempotency, and
+exact token-ledger equivalence with the vectorized ACS simulator."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import acs
+from repro.core.protocol import (AgentRuntime, ArtifactStore,
+                                 CoordinatorService, EventBus,
+                                 ShardedCoordinator)
+from repro.core.states import MESIState
+from repro.core import invariants
+
+
+def make_system(n_agents=4, n_artifacts=3, tokens=64, strategy="lazy",
+                lease_ttl=30.0, n_shards=0, **agent_kw):
+    bus = EventBus()
+    store = ArtifactStore()
+    if n_shards:
+        coord = ShardedCoordinator(n_shards, bus, store, strategy=strategy)
+    else:
+        coord = CoordinatorService(bus, store, strategy=strategy,
+                                   lease_ttl=lease_ttl)
+    for d in range(n_artifacts):
+        coord.register_artifact(f"artifact-{d}", list(range(tokens)))
+    agents = [AgentRuntime(f"agent-{a}", coord, bus, strategy=strategy,
+                           **agent_kw)
+              for a in range(n_agents)]
+    return coord, agents, bus
+
+
+def state_matrix(coord, agents, n_artifacts):
+    return np.array([[int(ag.state_of(f"artifact-{d}"))
+                      for d in range(n_artifacts)] for ag in agents])
+
+
+class TestProtocolBasics:
+    def test_read_miss_then_hit(self):
+        coord, agents, _ = make_system()
+        a = agents[0]
+        assert a.state_of("artifact-0") == MESIState.I
+        content = a.read("artifact-0")
+        assert list(content) == list(range(64))
+        assert a.state_of("artifact-0") == MESIState.S
+        before = coord.ledger.fetch_tokens
+        a.read("artifact-0")  # coherent hit: zero tokens
+        assert coord.ledger.fetch_tokens == before
+        assert coord.ledger.n_hits == 1
+
+    def test_write_invalidates_peers_and_bumps_version(self):
+        coord, agents, _ = make_system()
+        for ag in agents:
+            ag.read("artifact-1")
+        v = agents[0].write("artifact-1", [9] * 64)
+        assert v == 2
+        assert agents[0].state_of("artifact-1") == MESIState.S
+        for ag in agents[1:]:
+            assert ag.state_of("artifact-1") == MESIState.I
+        # re-read fetches the fresh content
+        assert agents[1].read("artifact-1") == [9] * 64
+
+    def test_swmr_invariant_along_random_run(self):
+        coord, agents, _ = make_system()
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            a = int(rng.integers(4))
+            d = f"artifact-{int(rng.integers(3))}"
+            if rng.random() < 0.3:
+                agents[a].write(d, list(rng.integers(0, 9, 64)))
+            else:
+                agents[a].read(d)
+            m = state_matrix(coord, agents, 3)
+            assert invariants.single_writer(m)
+
+    def test_version_monotonic(self):
+        coord, agents, _ = make_system()
+        versions = [coord.directory["artifact-0"].version]
+        for i in range(10):
+            agents[i % 4].write("artifact-0", [i] * 64)
+            versions.append(coord.directory["artifact-0"].version)
+        assert invariants.monotonic_version(versions[:-1], versions[1:])
+
+
+class TestLeaseRecovery:
+    def test_crash_in_m_state_recovers_via_lease_ttl(self):
+        """AS3 violation: writer crashes before commit; the lease TTL
+        reverts the orphaned lock (SS5.2)."""
+        coord, agents, _ = make_system(lease_ttl=30.0)
+        agents[1].read("artifact-0")
+        agents[0].write("artifact-0", [1] * 64, crash_before_commit=True)
+        assert agents[0].crashed
+        # lock is held: another writer is refused
+        assert agents[1].write("artifact-0", [2] * 64) is None
+        # ... until the lease expires
+        coord.advance(31.0)
+        assert coord.leases.holder("artifact-0") is None
+        v = agents[1].write("artifact-0", [2] * 64)
+        assert v is not None
+        # the crashed agent's in-progress write was lost (revert)
+        assert list(coord.store.get("artifact-0")) == [2] * 64
+
+    def test_commit_after_lease_expiry_is_rejected(self):
+        coord, agents, _ = make_system(lease_ttl=5.0)
+        agents[0].read("artifact-0")
+        granted, _ = coord.upgrade_request("agent-0", "artifact-0")
+        assert granted
+        coord.advance(10.0)  # lease expires
+        with pytest.raises(RuntimeError, match="without lease"):
+            coord.commit("agent-0", "artifact-0", [3] * 64)
+
+
+class TestEventBus:
+    def test_duplicate_delivery_is_idempotent(self):
+        """AS2: at-least-once delivery; re-invalidation is a no-op."""
+        bus = EventBus(duplicate_every=2)
+        store = ArtifactStore()
+        coord = CoordinatorService(bus, store)
+        coord.register_artifact("artifact-0", [0] * 64)
+        agents = [AgentRuntime(f"agent-{a}", coord, bus) for a in range(3)]
+        for ag in agents:
+            ag.read("artifact-0")
+        for i in range(6):
+            agents[i % 3].write("artifact-0", [i] * 64)
+        for ag in agents:
+            assert ag.read("artifact-0") == [5] * 64
+
+    def test_queued_delivery_preserves_safety(self):
+        """With a slow bus the authority's directory (not the agent's
+        view) is what serializes writes - SWMR still holds."""
+        bus = EventBus(deliver_immediately=False)
+        store = ArtifactStore()
+        coord = CoordinatorService(bus, store)
+        coord.register_artifact("artifact-0", [0] * 8)
+        a0 = AgentRuntime("agent-0", coord, bus)
+        a1 = AgentRuntime("agent-1", coord, bus)
+        a0.read("artifact-0")
+        a1.read("artifact-0")
+        a0.write("artifact-0", [1] * 8)
+        # a1 has not seen the invalidation yet (bus lag) but the
+        # authority directory already marks it Invalid.
+        assert coord.agent_state("agent-1", "artifact-0") == MESIState.I
+        bus.flush()
+        assert a1.state_of("artifact-0") == MESIState.I
+
+
+class TestShardedDirectory:
+    def test_sharded_coordinator_routes_and_preserves_swmr(self):
+        coord, agents, _ = make_system(n_shards=4)
+        rng = np.random.default_rng(1)
+        for _ in range(100):
+            a = int(rng.integers(4))
+            d = f"artifact-{int(rng.integers(3))}"
+            if rng.random() < 0.4:
+                agents[a].write(d, list(rng.integers(0, 9, 64)))
+            else:
+                agents[a].read(d)
+        # per-artifact home shards serialized everything
+        m = state_matrix(coord, agents, 3)
+        assert invariants.single_writer(m)
+        assert coord.ledger.n_writes > 0
+
+
+# ---------------------------------------------------------------------
+# Equivalence: message-level protocol vs vectorized JAX state machine.
+# ---------------------------------------------------------------------
+
+def replay_acs(cfg: acs.ACSConfig, script):
+    """Replay a scripted action list through the eager-mode JAX ACS."""
+    arrays = acs.init_arrays(cfg)
+    met = acs.init_metrics()
+    for (a, d, is_write) in script:
+        arrays = arrays._replace(
+            agent_actions=arrays.agent_actions.at[a].add(1))
+        if is_write:
+            arrays, met = acs._do_write(cfg, arrays, met, a, d)
+        else:
+            arrays, met = acs._do_read(cfg, arrays, met, a, d)
+    return arrays, met
+
+
+def replay_protocol(strategy, n_agents, n_artifacts, tokens, script,
+                    **agent_kw):
+    coord, agents, _ = make_system(n_agents, n_artifacts, tokens,
+                                   strategy=strategy, **agent_kw)
+    for (a, d, is_write) in script:
+        if is_write:
+            old = list(agents[a].read("artifact-%d" % d)) \
+                if False else [7] * tokens
+            agents[a].actions -= 0  # write() bumps the action clock itself
+            agents[a].write(f"artifact-{d}", old)
+        else:
+            agents[a].read(f"artifact-{d}")
+    return coord, agents
+
+
+@given(data=st.data(),
+       strategy=st.sampled_from(["lazy", "eager", "access_count"]))
+@settings(max_examples=25, deadline=None)
+def test_protocol_matches_vectorized_acs(data, strategy):
+    """The paper's SS7 reference implementation and our vectorized SS4
+    state machine produce identical token ledgers on identical traces."""
+    n_agents, n_artifacts, tokens = 3, 2, 32
+    script = data.draw(st.lists(
+        st.tuples(st.integers(0, n_agents - 1),
+                  st.integers(0, n_artifacts - 1),
+                  st.booleans()),
+        min_size=1, max_size=40))
+    cfg = acs.ACSConfig(
+        n_agents=n_agents, n_artifacts=n_artifacts,
+        artifact_tokens=tokens, n_steps=1,
+        strategy=acs.STRATEGY_CODES[strategy])
+    arrays, met = replay_acs(cfg, script)
+    coord, agents = replay_protocol(strategy, n_agents, n_artifacts,
+                                    tokens, script)
+    ledger = coord.ledger
+    assert int(met.fetch_tokens) == ledger.fetch_tokens
+    assert int(met.signal_tokens) == ledger.signal_tokens
+    assert int(met.push_tokens) == ledger.push_tokens
+    assert int(met.n_fetches) == ledger.n_fetches
+    assert int(met.n_hits) == ledger.n_hits
+    assert int(met.n_invalidation_signals) == ledger.n_invalidation_signals
+    # final MESI state matrices agree
+    m_proto = state_matrix(coord, agents, n_artifacts)
+    m_acs = np.asarray(arrays.state)
+    assert (m_proto == m_acs).all()
+    assert invariants.single_writer(m_acs)
+    assert invariants.exclusive_means_alone(m_acs)

@@ -1,0 +1,74 @@
+"""Token Coherence Theorem: bounds, conditions, and simulation dominance."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theorem
+
+
+def test_broadcast_cost_worked_example():
+    # paper SS4.3: n=5, S=50, m=3, |d|=4096 -> 3,072,000 tokens
+    p = theorem.WorkloadParams.uniform(5, 50, 3, 4096, 0.0)
+    assert theorem.broadcast_cost(p) == 3_072_000
+
+
+def test_intro_worked_example():
+    # paper SS1: 5 agents x 50 steps x one 8192-token artifact
+    p = theorem.WorkloadParams.uniform(5, 50, 1, 8192, 0.0)
+    assert theorem.broadcast_cost(p) == 2_048_000
+
+
+def test_lower_bound_canonical_values():
+    # paper SS4.5: n=4, S=40, V=0.05 -> 85%
+    assert theorem.savings_lower_bound_uniform(4, 40, 0.05) == pytest.approx(0.85)
+    # Table 1 scenario bounds: 85/80/65/40 %
+    for v, lb in [(0.05, .85), (0.10, .80), (0.25, .65), (0.50, .40)]:
+        assert theorem.savings_lower_bound_uniform(4, 40, v) == pytest.approx(lb)
+
+
+def test_volatility_cliff_values():
+    assert theorem.volatility_cliff(4, 40) == pytest.approx(0.9)
+    assert theorem.volatility_cliff(5, 20) == pytest.approx(0.75)
+
+
+def test_corollaries():
+    # Corollary 1: W=0 -> bound = 1 - n/S = 90% for n=4, S=40
+    assert theorem.max_savings_bound(4, 40) == pytest.approx(0.90)
+    # Corollary 2: W >= S - n -> bound <= 0
+    p = theorem.WorkloadParams.uniform(4, 40, 3, 4096, 0.9)  # W = 36 = S-n
+    assert theorem.savings_lower_bound(p) <= 1e-9
+
+
+@given(n=st.integers(2, 16), s=st.integers(5, 200),
+       m=st.integers(1, 8), d=st.integers(64, 65536),
+       v=st.floats(0.0, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_bound_consistency_property(n, s, m, d, v):
+    """Uniform closed form == general formula; coherence condition
+    matches the sign of the bound (Theorem 1)."""
+    p = theorem.WorkloadParams.uniform(n, s, m, d, v)
+    general = theorem.savings_lower_bound(p)
+    closed = theorem.savings_lower_bound_uniform(n, s, v)
+    assert general == pytest.approx(closed, abs=1e-9)
+    if theorem.coherence_condition(p):
+        assert general > -1e-9
+
+
+@given(n=st.integers(2, 16), s=st.integers(5, 200),
+       v=st.floats(0.0, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_bound_monotone_in_volatility(n, s, v):
+    """The lower bound decreases with V and the broadcast/coherent
+    asymptotic separation holds: bound -> 1 - n/S as V -> 0."""
+    lb = theorem.savings_lower_bound_uniform(n, s, v)
+    lb0 = theorem.savings_lower_bound_uniform(n, s, 0.0)
+    assert lb <= lb0 + 1e-12
+    assert lb0 == pytest.approx(1 - n / s)
+
+
+def test_prompt_cache_amplification_monotone():
+    a_low = theorem.prompt_cache_amplification(0.05, 0.9)
+    a_high = theorem.prompt_cache_amplification(0.5, 0.9)
+    assert a_high["amplification"] > a_low["amplification"] > 1.0
+    assert a_low["hit_rate_coherent"] == 1.0
