@@ -10,11 +10,64 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import pathlib
 import time
 from typing import Callable, Sequence
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+
+#: Fast-mode caps (CI smoke check: ``REPRO_BENCH_FAST=1``).
+FAST_MAX_RUNS = 3
+FAST_MAX_STEPS = 10
+FAST_MAX_ITERS = 1
+
+
+def fast_mode() -> bool:
+    """True when ``REPRO_BENCH_FAST=1``: shrink n_runs/n_steps so the
+    full ``python -m benchmarks.run`` finishes in under a minute."""
+    return os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+
+def bench_runs(n_runs: int) -> int:
+    """Cap per-configuration run count in fast mode."""
+    return min(n_runs, FAST_MAX_RUNS) if fast_mode() else n_runs
+
+
+def bench_steps(n_steps: int) -> int:
+    """Cap episode step count in fast mode."""
+    return min(n_steps, FAST_MAX_STEPS) if fast_mode() else n_steps
+
+
+def bench_iters(iters: int) -> int:
+    """Cap timing repetitions in fast mode."""
+    return min(iters, FAST_MAX_ITERS) if fast_mode() else iters
+
+
+def bench_points(seq: Sequence) -> tuple:
+    """Thin a sweep axis to its endpoints in fast mode.  Compile cost is
+    per static shape, so smoke checks keep only the first and last point
+    of shape-changing sweeps (agent counts, step counts, K values)."""
+    seq = tuple(seq)
+    if not fast_mode() or len(seq) <= 2:
+        return seq
+    return (seq[0], seq[-1])
+
+
+def bench_scenario(scn, cap_steps: bool = True):
+    """Apply fast-mode caps to a ``ScenarioConfig`` (no-op otherwise).
+
+    Pass ``cap_steps=False`` when the benchmark sweeps the step count
+    itself (table5): capping would silently collapse the swept axis.
+    """
+    if not fast_mode():
+        return scn
+    scn = dataclasses.replace(scn, n_runs=bench_runs(scn.n_runs))
+    if cap_steps:
+        scn = dataclasses.replace(
+            scn, acs=dataclasses.replace(
+                scn.acs, n_steps=bench_steps(scn.acs.n_steps)))
+    return scn
 
 
 @dataclasses.dataclass
@@ -44,7 +97,12 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3):
 def write_results(module_name: str, rows: Sequence[BenchRow],
                   markdown: str, extra: dict | None = None) -> None:
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    if fast_mode():
+        # Provenance: smoke artifacts must not pass for full-grid runs.
+        markdown = ("> **REPRO_BENCH_FAST=1 smoke run** - shrunk grid, "
+                    "not paper-comparable.\n\n" + markdown)
     payload = {
+        "fast_mode": fast_mode(),
         "rows": [dataclasses.asdict(r) for r in rows],
         "extra": extra or {},
     }

@@ -7,7 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import BenchRow, md_table, timed, write_results
+from benchmarks.common import (BenchRow, fast_mode, md_table, timed,
+                               write_results)
 from repro.kernels import ref
 
 
@@ -29,7 +30,7 @@ def run() -> list[BenchRow]:
     ks = jax.random.split(key, 4)
 
     # flash attention: prefill shape (bf16)
-    b, hq, hkv, l, d = 1, 8, 2, 1024, 128
+    b, hq, hkv, l, d = 1, 8, 2, (256 if fast_mode() else 1024), 128
     q = jax.random.normal(ks[0], (b, hq, l, d), jnp.bfloat16)
     k = jax.random.normal(ks[1], (b, hkv, l, d), jnp.bfloat16)
     v = jax.random.normal(ks[2], (b, hkv, l, d), jnp.bfloat16)
@@ -41,8 +42,8 @@ def run() -> list[BenchRow]:
     rows.append(BenchRow("kernels/flash_attention", us,
                          f"arith_intensity={ai:,.0f}flop/B"))
 
-    # decode attention: 32k cache
-    l = 32768
+    # decode attention: 32k cache (4k in fast mode)
+    l = 4096 if fast_mode() else 32768
     qd = jax.random.normal(ks[0], (1, hq, d), jnp.bfloat16)
     kc = jax.random.normal(ks[1], (1, hkv, l, d), jnp.bfloat16)
     vc = jax.random.normal(ks[2], (1, hkv, l, d), jnp.bfloat16)
@@ -55,7 +56,8 @@ def run() -> list[BenchRow]:
                          f"arith_intensity={ai:.1f}flop/B"))
 
     # rmsnorm
-    x = jax.random.normal(ks[0], (4096, 4096), jnp.bfloat16)
+    rows_n = 1024 if fast_mode() else 4096
+    x = jax.random.normal(ks[0], (rows_n, 4096), jnp.bfloat16)
     w = jnp.ones((4096,), jnp.bfloat16)
     fn = jax.jit(lambda x, w: ref.rmsnorm_ref(x, w))
     _, us = timed(lambda: jax.block_until_ready(fn(x, w)))
@@ -65,7 +67,7 @@ def run() -> list[BenchRow]:
 
     # mesi tick over a fleet of simulations
     from repro.kernels.mesi_transition import mesi_tick_pallas
-    B, n, m = 1024, 4, 3
+    B, n, m = (256 if fast_mode() else 1024), 4, 3
     import numpy as np
     rng = np.random.default_rng(0)
     args = [jnp.asarray(rng.integers(0, 2, (B, n, m)).astype(np.int32)),

@@ -10,8 +10,8 @@ practitioner rule under test: pointer deployments should prefer eager.
 
 from __future__ import annotations
 
-from benchmarks.common import (BenchRow, fmt_pct, md_table, timed,
-                               write_results)
+from benchmarks.common import (BenchRow, bench_scenario, fmt_pct, md_table,
+                               timed, write_results)
 from repro.core import acs
 from repro.sim import pointer_semantics_scenario, run_scenario
 
@@ -19,7 +19,7 @@ PAPER = {"eager": (16798, 97.7), "lazy": (341036, 41.0)}
 
 
 def run() -> list[BenchRow]:
-    scn = pointer_semantics_scenario()
+    scn = bench_scenario(pointer_semantics_scenario())
     rows, table = [], []
     totals = {}
     for name, code in [("eager", acs.EAGER), ("lazy", acs.LAZY)]:

@@ -11,6 +11,15 @@ EXPERIMENTS.md).
 
 from __future__ import annotations
 
+import os
+
+if os.environ.get("REPRO_BENCH_FAST", "0") == "1":
+    # Smoke mode: compile time dominates the suite on CPU; dialing XLA's
+    # backend optimization down ~30% per program changes no integer
+    # token counters.  Must happen before jax initializes.
+    os.environ["XLA_FLAGS"] = ("--xla_backend_optimization_level=0 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
 import importlib
 import sys
 import traceback
@@ -28,6 +37,9 @@ MODULES = {
     "staleness_tradeoff": "staleness",
     "serving_flops": "serving",
     "kernel_micro": "kernels",
+    # last: its cold-compile measurement clears the jit caches, which
+    # would force the modules after it to recompile warm programs.
+    "sweep_engine": "sweep",
 }
 
 

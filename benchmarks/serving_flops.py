@@ -14,7 +14,8 @@ the SS8.1 workload and reports FLOPs savings for:
 
 from __future__ import annotations
 
-from benchmarks.common import BenchRow, md_table, timed, write_results
+from benchmarks.common import (BenchRow, bench_steps, md_table, timed,
+                               write_results)
 from repro.configs import ARCHS, n_active_params, smoke_config
 from repro.runtime.coherent_serving import (CoherentServingSystem,
                                             run_workload)
@@ -35,7 +36,8 @@ def _run(sorted_layout: bool):
          for i in range(N_ARTIFACTS)},
         strategy="lazy", volatility_sorted=sorted_layout,
         n_active_params=n_active_params(ARCHS[ARCH]))
-    return run_workload(system, STEPS, VOLATILITIES, seed=20260306)
+    return run_workload(system, bench_steps(STEPS), VOLATILITIES,
+                        seed=20260306)
 
 
 def run() -> list[BenchRow]:

@@ -13,7 +13,8 @@ rebroadcast.
 
 from __future__ import annotations
 
-from benchmarks.common import BenchRow, fmt_pct, md_table, timed, write_results
+from benchmarks.common import (BenchRow, bench_points, bench_scenario,
+                               fmt_pct, md_table, timed, write_results)
 from repro.sim import SCENARIOS, compare
 
 K_VALUES = (1, 2, 3, 5, 8, 0)   # 0 = enforcement off (paper's default)
@@ -22,8 +23,9 @@ K_VALUES = (1, 2, 3, 5, 8, 0)   # 0 = enforcement off (paper's default)
 def run() -> list[BenchRow]:
     rows, table = [], []
     base = None
-    for k in K_VALUES:
-        scn = SCENARIOS["B"].with_overrides(max_stale_steps=k)
+    for k in bench_points(K_VALUES):
+        scn = bench_scenario(SCENARIOS["B"]).with_overrides(
+            max_stale_steps=k)
         cmp_, us = timed(compare, scn, warmup=1, iters=1)
         label = str(k) if k else "off"
         if k == 0:

@@ -1,0 +1,172 @@
+"""Sweep-engine micro-benchmark: compile count + steady-state throughput.
+
+Measures the one-compilation fleet-sweep path (``sweep_volatility``:
+one fused (variant x volatility x run) XLA program, module-level jit
+cache) against the pre-fusion per-cell loop it replaced (fresh
+``jax.jit`` closure per (volatility, variant) cell - every sweep
+retraced every cell).
+
+Reports, for a V-point x 2-strategy (broadcast + lazy) x n_runs grid:
+
+  * ``compilations``   - episode-program traces (engine.trace_count)
+  * ``cold_s``         - first call, compile included
+  * ``steady_s``       - repeat call, caches warm
+  * ``sims_per_s``     - episodes / steady_s
+
+Writes ``BENCH_sweep.json`` at the repo root (schema documented in
+``benchmarks/README.md``) so the perf trajectory is tracked across PRs,
+plus the usual markdown/JSON under ``benchmarks/results/``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+from benchmarks.common import (BenchRow, bench_iters, bench_points,
+                               bench_scenario, fast_mode, md_table,
+                               write_results)
+from repro.core import acs
+from repro.sim import cliff_scenario, resolve_tick_backend, sweep_volatility
+from repro.sim import engine
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_JSON = REPO_ROOT / "BENCH_sweep.json"
+
+#: The acceptance grid: 4 volatilities x (broadcast + lazy).
+VOLATILITIES = (0.05, 0.10, 0.25, 0.50)
+
+
+def _vols() -> tuple:
+    return bench_points(VOLATILITIES)
+
+
+def _seed_vols() -> tuple:
+    # The seed-loop baseline exists to demonstrate per-cell retracing;
+    # in fast mode one volatility (2 compiles) is demonstration enough.
+    vols = _vols()
+    return vols[:1] if len(vols) < len(VOLATILITIES) else vols
+
+
+def _seed_loop(base_scn) -> None:
+    """The pre-fusion path, reproduced as the baseline: one fresh
+    ``jax.jit`` program per (volatility, variant) cell, two separate
+    launches per comparison.  Fresh jit closures retrace on *every*
+    sweep - exactly what the seed engine paid."""
+    for scn in engine.sweep_cells(base_scn, _seed_vols()):
+        keys = engine._grid_keys([scn.seed], scn.n_runs)[0]
+        for strat in (acs.BROADCAST, scn.acs.strategy):
+            cfg = dataclasses.replace(scn.acs, strategy=strat)
+
+            def batch(ks, _cfg=cfg):
+                engine._note_trace()
+                return jax.vmap(
+                    lambda k: engine._episode_metrics(_cfg, k))(ks)
+
+            jax.block_until_ready(jax.jit(batch)(keys))
+
+
+def _fused(base_scn) -> None:
+    sweep_volatility(base_scn, _vols())
+
+
+def run() -> list[BenchRow]:
+    base = bench_scenario(cliff_scenario(VOLATILITIES[0]))
+    n_episodes = len(_vols()) * 2 * base.n_runs
+    iters = bench_iters(3)
+
+    def measure(fn, n_eps, always_cold=False):
+        engine.clear_compile_cache()
+        engine.reset_trace_count()
+        t0 = time.perf_counter()
+        fn(base)
+        cold_s = time.perf_counter() - t0
+        compilations = engine.trace_count()
+        if always_cold and iters <= 1:
+            # Fresh jit closures retrace on every call, so for this path
+            # cold IS steady; skip the redundant re-measure in fast mode.
+            steady_s = cold_s
+        else:
+            steady = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                fn(base)
+                steady.append(time.perf_counter() - t0)
+            steady_s = sorted(steady)[len(steady) // 2]
+        return {
+            "compilations": compilations,
+            "recompilations_steady": engine.trace_count() - compilations,
+            "cold_s": cold_s,
+            "steady_s": steady_s,
+            "n_episodes": n_eps,
+            "sims_per_s": n_eps / steady_s,
+        }
+
+    seed_eps = len(_seed_vols()) * 2 * base.n_runs
+    seed_loop = measure(_seed_loop, seed_eps, always_cold=True)
+    # The seed loop keeps retracing in steady state (fresh closures);
+    # its per-sweep compile count is the honest recurring cost.
+    fused = measure(_fused, n_episodes)
+    fused["compile_s"] = max(0.0, fused["cold_s"] - fused["steady_s"])
+    speedup = seed_loop["sims_per_s"] and (
+        fused["sims_per_s"] / seed_loop["sims_per_s"])
+
+    payload = {
+        "schema_version": 1,
+        "fast_mode": fast_mode(),
+        "grid": {
+            "volatilities": list(_vols()),
+            "strategies": ["broadcast", "lazy"],
+            "n_runs": base.n_runs,
+            "n_steps": base.acs.n_steps,
+            "n_agents": base.acs.n_agents,
+            "n_artifacts": base.acs.n_artifacts,
+            "n_episodes": n_episodes,
+        },
+        "backend": jax.default_backend(),
+        "tick_backend": resolve_tick_backend(base.acs, n_episodes),
+        "seed_loop": seed_loop,
+        "fused": fused,
+        "speedup_steady": speedup,
+    }
+    if not fast_mode():
+        # The repo-root artifact is the cross-PR perf trajectory; smoke
+        # runs (shrunk grid, opt-level-0 compiles) must not clobber it.
+        BENCH_JSON.write_text(json.dumps(payload, indent=2,
+                                         default=float))
+
+    table = [
+        ["seed loop (per-cell jit)", seed_loop["compilations"],
+         f"{seed_loop['cold_s']:.3f}", f"{seed_loop['steady_s']:.3f}",
+         f"{seed_loop['sims_per_s']:.1f}"],
+        ["fused one-program sweep", fused["compilations"],
+         f"{fused['cold_s']:.3f}", f"{fused['steady_s']:.3f}",
+         f"{fused['sims_per_s']:.1f}"],
+    ]
+    md = ("### Sweep engine - compile count and steady-state throughput\n\n"
+          + md_table(["path", "compilations", "cold s", "steady s",
+                      "sims/s"], table)
+          + f"\nSteady-state speedup: {speedup:.1f}x "
+          f"(grid: {len(_vols())} volatilities x 2 strategies x "
+          f"{base.n_runs} runs; backend {payload['backend']}, tick "
+          f"{payload['tick_backend']}).\n")
+    rows = [
+        BenchRow(name="sweep/seed_loop",
+                 us_per_call=seed_loop["steady_s"] * 1e6 / seed_eps,
+                 derived=f"compiles={seed_loop['compilations']}"),
+        BenchRow(name="sweep/fused",
+                 us_per_call=fused["steady_s"] * 1e6 / n_episodes,
+                 derived=(f"compiles={fused['compilations']}"
+                          f" speedup={speedup:.1f}x")),
+    ]
+    write_results("sweep_engine", rows, md, extra=payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -2,13 +2,21 @@
 
 Broadcast vs lazy invalidation over the four canonical workloads
 (V in {0.05, 0.10, 0.25, 0.50}), 10 seeded runs, population sigma.
+
+Fused sweep path: the four scenarios share one static configuration, so
+``compare_grid`` runs the whole (variant x scenario x run) grid as a
+single XLA program - one compilation, one launch.
+
+Timing note: one fused program runs every cell, so ``us_per_call`` is
+the grid-average per-episode time repeated on each row - per-cell
+attribution does not exist post-fusion.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import (BenchRow, fmt_k, fmt_pct, md_table, timed,
-                               write_results)
-from repro.sim import SCENARIOS, compare
+from benchmarks.common import (BenchRow, bench_scenario, fmt_k, fmt_pct,
+                               md_table, timed, write_results)
+from repro.sim import SCENARIOS, compare_grid
 
 PAPER = {  # savings%, CRR, CHR% from the paper's Table 1
     "A": (95.0, 0.050, 79.4),
@@ -19,10 +27,12 @@ PAPER = {  # savings%, CRR, CHR% from the paper's Table 1
 
 
 def run() -> list[BenchRow]:
+    keys = list(SCENARIOS)
+    scns = [bench_scenario(SCENARIOS[k]) for k in keys]
+    cmps, us = timed(compare_grid, scns, warmup=1, iters=1)
+    n_episodes = sum(s.n_runs * 2 for s in scns)
     rows, table = [], []
-    for key, scn in SCENARIOS.items():
-        cmp_, us = timed(compare, scn, warmup=1, iters=1)
-        n_episodes = scn.n_runs * 2  # broadcast + coherent
+    for key, scn, cmp_ in zip(keys, scns, cmps):
         table.append([
             scn.name, f"{scn.acs.volatility:.2f}",
             fmt_k(cmp_.broadcast.total_tokens_mean,

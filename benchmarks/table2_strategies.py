@@ -1,8 +1,14 @@
-"""Paper Table 2: strategy comparison under Scenario B (V = 0.10, SS8.2)."""
+"""Paper Table 2: strategy comparison under Scenario B (V = 0.10, SS8.2).
+
+Strategy is a static code (it selects transition *code paths*, not
+data), so each strategy is one fused broadcast+coherent program; the
+jit cache means re-running the table recompiles nothing.
+"""
 
 from __future__ import annotations
 
-from benchmarks.common import (BenchRow, fmt_k, fmt_pct, md_table, timed,
+from benchmarks.common import (BenchRow, bench_points, bench_scenario,
+                               fmt_k, fmt_pct, md_table, timed,
                                write_results)
 from repro.core import acs
 from repro.sim import SCENARIOS, compare
@@ -18,13 +24,13 @@ STRATEGIES = [("eager", acs.EAGER), ("lazy", acs.LAZY), ("ttl", acs.TTL),
 
 
 def run() -> list[BenchRow]:
-    scn = SCENARIOS["B"]
+    scn = bench_scenario(SCENARIOS["B"])
     rows, table = [], []
     bc = compare(scn, acs.LAZY).broadcast  # shared broadcast baseline
     table.append(["broadcast baseline",
                   fmt_k(bc.total_tokens_mean, bc.total_tokens_std),
                   "-", "full rebroadcast every step", "-"])
-    for name, code in STRATEGIES:
+    for name, code in bench_points(STRATEGIES):
         cmp_, us = timed(compare, scn, code, warmup=1, iters=1)
         table.append([
             name,

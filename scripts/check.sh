@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Repo health check: tier-1 tests + fast-mode smoke benches.
+#
+# Usage: scripts/check.sh
+#   - runs the full pytest suite (tier-1 verify from ROADMAP.md)
+#   - runs the sweep-engine + table benches in REPRO_BENCH_FAST mode
+#     (shrunk n_runs/n_steps; completes in well under a minute)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo
+echo "== smoke benches (REPRO_BENCH_FAST=1) =="
+REPRO_BENCH_FAST=1 python -m benchmarks.run sweep table1 table2 cliff
+
+echo
+echo "check.sh: OK"

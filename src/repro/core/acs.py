@@ -279,12 +279,22 @@ def _do_write(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
 
 
 def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
-         key: jax.Array, step: jax.Array):
-    """One orchestration step for every agent (serialized authority)."""
+         key: jax.Array, step: jax.Array,
+         volatility=None, p_act=None):
+    """One orchestration step for every agent (serialized authority).
+
+    ``volatility`` and ``p_act`` default to the static config values but
+    may be passed as *traced* scalars, so one compiled program can serve
+    a whole ``(volatility x run)`` sweep grid (the fleet-scale path in
+    ``repro.sim.engine``).  Strategy and the shape-determining fields
+    stay static - they select code, not data.
+    """
+    volatility = cfg.volatility if volatility is None else volatility
+    p_act = cfg.p_act if p_act is None else p_act
     k_act, k_art, k_wr = jax.random.split(key, 3)
-    acts = jax.random.bernoulli(k_act, cfg.p_act, (cfg.n_agents,))
+    acts = jax.random.bernoulli(k_act, p_act, (cfg.n_agents,))
     arts = jax.random.randint(k_art, (cfg.n_agents,), 0, cfg.n_artifacts)
-    writes = jax.random.bernoulli(k_wr, cfg.volatility, (cfg.n_agents,))
+    writes = jax.random.bernoulli(k_wr, volatility, (cfg.n_agents,))
 
     if cfg.strategy == BROADCAST:
         # Full-state rebroadcast: every agent receives every artifact.
@@ -304,7 +314,7 @@ def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
         # clock (expected n*p_act action events per step).  All resident
         # subscriptions are refreshed each epoch; entries never expire
         # mid-epoch, so write activity is irrelevant (SS5.5 TTL).
-        rate = cfg.n_agents * cfg.p_act
+        rate = cfg.n_agents * p_act
         epoch_now = jnp.floor(rate * step.astype(jnp.float32)
                               / cfg.ttl_events).astype(jnp.int32)
         epoch_prev = jnp.where(
@@ -369,8 +379,12 @@ def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
     return arrays, met
 
 
-def run_episode(cfg: ACSConfig, key: jax.Array) -> ACSMetrics:
-    """Run a full S-step episode; returns final metrics."""
+def run_episode(cfg: ACSConfig, key: jax.Array,
+                volatility=None, p_act=None) -> ACSMetrics:
+    """Run a full S-step episode; returns final metrics.
+
+    ``volatility`` / ``p_act`` may be traced scalars (see ``tick``).
+    """
     arrays = init_arrays(cfg)
     met = init_metrics()
     keys = jax.random.split(key, cfg.n_steps)
@@ -378,7 +392,8 @@ def run_episode(cfg: ACSConfig, key: jax.Array) -> ACSMetrics:
     def body(carry, inp):
         arrays, met = carry
         step, k = inp
-        arrays, met = tick(cfg, arrays, met, k, step)
+        arrays, met = tick(cfg, arrays, met, k, step,
+                           volatility=volatility, p_act=p_act)
         return (arrays, met), None
 
     steps = jnp.arange(cfg.n_steps, dtype=jnp.int32)

@@ -12,6 +12,7 @@ wrappers in ``ops.py``; pure-jnp oracles in ``ref.py``):
 from repro.kernels.ops import (rmsnorm, flash_attention, decode_attention,
                                mesi_tick)
 from repro.kernels import ref
+from repro.kernels.backend import interpret_default, resolve_interpret
 
 __all__ = ["rmsnorm", "flash_attention", "decode_attention", "mesi_tick",
-           "ref"]
+           "ref", "interpret_default", "resolve_interpret"]

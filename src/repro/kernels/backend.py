@@ -1,0 +1,34 @@
+"""Backend auto-detection shared by every Pallas kernel wrapper.
+
+One rule, one place: on a real TPU the kernels lower through Mosaic;
+anywhere else (this CPU container, GPU hosts without a Pallas TPU
+backend) they run under ``interpret=True`` against the same kernel
+bodies.  Callers that need to force a mode (tests pinning
+interpret=True, dry-run routing through the jnp oracles) still can -
+``None`` means "auto".
+
+``REPRO_KERNEL_BACKEND=ref`` routes the public ops through the pure-jnp
+oracles in ``ref.py`` instead of Pallas (used by the dry-run path so XLA
+cost analysis reflects fused-op FLOPs).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def use_ref() -> bool:
+    """True when the jnp reference oracles should replace Pallas."""
+    return os.environ.get("REPRO_KERNEL_BACKEND", "pallas") == "ref"
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode unless a real TPU backend is attached."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Map a kernel's ``interpret`` argument to a concrete mode."""
+    return interpret_default() if interpret is None else bool(interpret)

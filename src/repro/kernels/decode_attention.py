@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -71,11 +73,12 @@ def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
                             kv_len: jax.Array | None = None, *,
                             scale: float | None = None,
                             block_k: int = 256,
-                            interpret: bool = True) -> jax.Array:
+                            interpret: bool | None = None) -> jax.Array:
     """q: (B, Hq, D); caches: (B, Hkv, L, D); kv_len: (B,) int32 or None.
 
-    Returns (B, Hq, D).
+    Returns (B, Hq, D).  ``interpret=None`` auto-detects the backend.
     """
+    interpret = resolve_interpret(interpret)
     b, hq, d = q.shape
     hkv, lmax = k_cache.shape[1], k_cache.shape[2]
     assert hq % hkv == 0

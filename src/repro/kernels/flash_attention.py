@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -80,8 +82,13 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True,
                            scale: float | None = None,
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = True) -> jax.Array:
-    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D).  Returns (B, Hq, Lq, D)."""
+                           interpret: bool | None = None) -> jax.Array:
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D).  Returns (B, Hq, Lq, D).
+
+    ``interpret=None`` auto-detects: compiled Mosaic on TPU, interpret
+    mode elsewhere (``repro.kernels.backend``).
+    """
+    interpret = resolve_interpret(interpret)
     b, hq, lq, d = q.shape
     hkv, lk = k.shape[1], k.shape[2]
     assert hq % hkv == 0, "GQA requires Hq % Hkv == 0"

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.states import MESIState
+from repro.kernels.backend import resolve_interpret
 
 _I, _S = int(MESIState.I), int(MESIState.S)
 N_COUNTERS = 8
@@ -126,13 +127,15 @@ def mesi_tick_pallas(state, version, last_sync, reads_since_fetch,
                      acts, arts, writes, *, artifact_tokens: int,
                      eager: bool = False, access_k: int = 0,
                      signal_tokens: int = 12, block_sims: int = 128,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """One coherence tick over a batch of simulations.
 
     Shapes: state/last_sync/reads (B, n, m) int32; version (B, m) int32;
     acts/arts/writes (B, n) int32.  Returns (state', version', sync',
-    reads', counters (B, 8)).
+    reads', counters (B, 8)).  ``interpret=None`` auto-detects the
+    backend (compiled Mosaic on TPU, interpret mode elsewhere).
     """
+    interpret = resolve_interpret(interpret)
     B, n, m = state.shape
     bs = min(block_sims, B)
     pad = (-B) % bs

@@ -11,25 +11,21 @@ reference ops so XLA cost analysis reflects the fused-op FLOPs).
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.backend import interpret_default, use_ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.mesi_transition import mesi_tick_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
 
-
-def _use_ref() -> bool:
-    return os.environ.get("REPRO_KERNEL_BACKEND", "pallas") == "ref"
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+# Backwards-compatible aliases (the auto-detect logic used to live here).
+_use_ref = use_ref
+_interpret = interpret_default
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows"))

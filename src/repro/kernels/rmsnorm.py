@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -26,8 +28,12 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
 
 def rmsnorm_pallas(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
                    block_rows: int = 128,
-                   interpret: bool = True) -> jax.Array:
-    """x: (..., d); weight: (d,).  Returns same shape/dtype as x."""
+                   interpret: bool | None = None) -> jax.Array:
+    """x: (..., d); weight: (d,).  Returns same shape/dtype as x.
+
+    ``interpret=None`` auto-detects the backend.
+    """
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     d = orig_shape[-1]
     rows = 1

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, bonus_ref, s0_ref,
                 y_ref, s_out_ref, state_scr, *, chunk: int):
@@ -59,10 +61,12 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, bonus_ref, s0_ref,
 
 
 def rwkv6_scan_pallas(r, k, v, w, bonus, initial_state=None, *,
-                      chunk: int = 64, interpret: bool = True):
+                      chunk: int = 64, interpret: bool | None = None):
     """r/k/v/w: (B, T, H, dh); bonus: (H, dh);
     initial_state: (B, H, dh, dh) fp32 or None.
-    Returns (y (B, T, H, dh), final_state (B, H, dh, dh))."""
+    Returns (y (B, T, H, dh), final_state (B, H, dh, dh)).
+    ``interpret=None`` auto-detects the backend."""
+    interpret = resolve_interpret(interpret)
     b, t, h, dh = r.shape
     chunk = min(chunk, t)
     assert t % chunk == 0, "T must divide the chunk size"

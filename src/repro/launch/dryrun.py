@@ -171,7 +171,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     options = cell_options(cfg, shape_cfg, mesh)
     compiled = _lower_and_compile(cfg, shape_cfg, mesh, options)
-    cost = compiled.cost_analysis()
+    cost = rf.cost_analysis_dict(compiled)
     mem = _mem_fields(compiled)
     coll_raw = rf.collective_bytes_from_hlo(compiled.as_text())
 

@@ -40,6 +40,15 @@ _OP_TOKEN_RE = re.compile(
     r"collective-permute)(?:-start)?\(")
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized across jax versions:
+    newer jax returns a dict, older returns list[dict]."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     if dtype not in _DTYPE_BYTES:
         return 0

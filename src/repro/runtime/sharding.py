@@ -73,7 +73,11 @@ def spec_for(path: str, ndim: int, base_rank: Optional[int] = None) -> P:
 
 
 def _flatten_with_paths(tree, prefix=""):
-    if isinstance(tree, dict):
+    # PartitionSpec subclasses tuple on some jax versions; it is always
+    # a leaf here, never a container to recurse into.
+    if isinstance(tree, P):
+        yield prefix, tree
+    elif isinstance(tree, dict):
         for k in sorted(tree):
             yield from _flatten_with_paths(tree[k], f"{prefix}/{k}")
     elif isinstance(tree, (list, tuple)):

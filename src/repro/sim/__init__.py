@@ -7,8 +7,9 @@ from repro.sim.scenarios import (
     pointer_semantics_scenario,
 )
 from repro.sim.engine import (
-    RunStats, RunResult, Comparison, run_scenario, compare,
-    sweep_volatility,
+    RunStats, RunResult, Comparison, run_scenario, compare, compare_grid,
+    sweep_volatility, sweep_cells, trace_count, reset_trace_count,
+    clear_compile_cache, resolve_tick_backend,
 )
 
 __all__ = [
@@ -18,5 +19,6 @@ __all__ = [
     "artifact_size_scenario", "step_scaling_scenario",
     "pointer_semantics_scenario",
     "RunStats", "RunResult", "Comparison", "run_scenario", "compare",
-    "sweep_volatility",
+    "compare_grid", "sweep_volatility", "sweep_cells", "trace_count",
+    "reset_trace_count", "clear_compile_cache", "resolve_tick_backend",
 ]

@@ -1,12 +1,29 @@
 """Tick-based discrete-event simulation engine (paper SS8).
 
-The engine runs the vectorized ACS state machine (``repro.core.acs``)
-over S steps via ``lax.scan`` and over independent seeded runs via
-``vmap``; an optional outer ``vmap`` sweeps whole scenario grids in one
-XLA program (thousands of concurrent simulated deployments - the
-fleet-scale evaluation mode).  Per-tick MESI transitions can optionally
-be routed through the Pallas kernel (``repro.kernels.mesi_transition``)
-for the batched path.
+Fleet-scale sweep architecture: an entire ``(variant x volatility x
+run)`` evaluation grid compiles **once** and runs as **one** batched XLA
+program.  Three mechanisms make that possible:
+
+  1. **Traced sweep axes.**  ``volatility`` and ``p_act`` (and the PRNG
+     key, as always) are traced scalars of the episode runner
+     (``repro.core.acs.run_episode``), so a single compiled program
+     covers every point of a volatility sweep.  Strategy and the
+     shape-determining fields (agents, artifacts, steps) stay static -
+     they select code, not data.
+  2. **Module-level jit cache.**  Compiled grid programs are cached per
+     static ``ACSConfig`` signature (``_static_key``), so repeated
+     ``run_scenario`` / ``compare`` calls never retrace.  The cache is
+     instrumented (``trace_count``) so benchmarks and tests can assert
+     the one-compilation property.
+  3. **Fused baseline.**  ``compare`` / ``sweep_volatility`` stack the
+     broadcast baseline and the coherent variant along a leading variant
+     axis *inside* the same jitted program - one launch, not two.
+
+Per-tick MESI transitions route through the Pallas kernel
+(``repro.kernels.mesi_transition``) when a real TPU backend is attached
+and the flattened batch is large enough to fill it; otherwise the
+vectorized ``lax.scan`` path (vmapped ``acs.run_episode``) is used.
+Force either with ``REPRO_SIM_TICK=pallas|scan``.
 
 Population statistics (mean, population std) are reported exactly as the
 paper does (10 runs, sigma over the population).
@@ -15,19 +32,103 @@ paper does (10 runs, sigma over the population).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import os
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import acs
+from repro.core.states import MESIState
+from repro.kernels.backend import interpret_default
+from repro.kernels.mesi_transition import N_COUNTERS, mesi_tick_pallas
 from repro.sim.scenarios import ScenarioConfig
+
+# ---------------------------------------------------------------------------
+# Compilation accounting.  ``_note_trace`` runs as a Python side effect at
+# *trace* time only, so the counter increments once per compiled program
+# (and once more per shape-driven retrace) - never per execution.
+
+_TRACE_COUNT = 0
+
+
+def _note_trace() -> None:
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+
+
+def trace_count() -> int:
+    """Number of sweep/episode program compilations since last reset."""
+    return _TRACE_COUNT
+
+
+def reset_trace_count() -> None:
+    global _TRACE_COUNT
+    _TRACE_COUNT = 0
+
+
+# ---------------------------------------------------------------------------
+# Static signature + jit cache.
+
+#: ACSConfig fields baked into compiled code.  ``volatility`` and
+#: ``p_act`` are deliberately absent: they are traced sweep axes.
+_STATIC_FIELDS = ("n_agents", "n_artifacts", "artifact_tokens", "n_steps",
+                  "strategy", "ttl_events", "access_k", "max_stale_steps")
+
+_GRID_CACHE: dict = {}
+
+#: Minimum flattened episode batch before the Pallas tick path pays off
+#: on TPU (below this the grid underfills the VPU slabs).
+PALLAS_MIN_BATCH = 256
+
+_PALLAS_STRATEGIES = (acs.LAZY, acs.EAGER, acs.ACCESS_COUNT)
+
+_I = int(MESIState.I)
+
+
+def _static_key(cfg: acs.ACSConfig) -> tuple:
+    return tuple(getattr(cfg, f) for f in _STATIC_FIELDS)
+
+
+def clear_compile_cache() -> None:
+    """Drop cached grid programs (benchmarks measuring cold compiles)."""
+    _GRID_CACHE.clear()
+    jax.clear_caches()
+
+
+def _pallas_tick_supported(cfg: acs.ACSConfig) -> bool:
+    """The batched MESI kernel implements the invalidation strategies
+    (lazy / eager / access-count) without K-staleness enforcement;
+    broadcast and TTL are bulk-inject paths with no per-agent kernel."""
+    return cfg.strategy in _PALLAS_STRATEGIES and cfg.max_stale_steps == 0
+
+
+def resolve_tick_backend(cfg: acs.ACSConfig, batch: int) -> str:
+    """'pallas' | 'scan' for a grid of ``batch`` flattened episodes."""
+    forced = os.environ.get("REPRO_SIM_TICK", "auto")
+    if forced == "scan":
+        return "scan"
+    if forced == "pallas":
+        return "pallas" if _pallas_tick_supported(cfg) else "scan"
+    if (not interpret_default() and _pallas_tick_supported(cfg)
+            and batch >= PALLAS_MIN_BATCH):
+        return "pallas"
+    return "scan"
+
+
+# ---------------------------------------------------------------------------
+# Result containers (unchanged public shape).
 
 
 @dataclasses.dataclass(frozen=True)
 class RunStats:
-    """Per-configuration population statistics over n_runs."""
+    """Per-configuration population statistics over n_runs.
+
+    ``max_staleness_max`` / ``max_version_lag_max`` are ``-1`` when the
+    episodes ran on the Pallas tick path, which does not track staleness
+    diagnostics (use ``tick_backend="scan"`` to audit them).
+    """
 
     name: str
     strategy: str
@@ -66,58 +167,6 @@ class RunResult:
     per_run_chr: np.ndarray
 
 
-def _episode_metrics(cfg: acs.ACSConfig, key: jax.Array) -> dict:
-    met = acs.run_episode(cfg, key)
-    return {
-        "total_tokens": met.total_tokens,
-        "sync_tokens": met.sync_tokens,
-        "fetch_tokens": met.fetch_tokens,
-        "signal_tokens": met.signal_tokens,
-        "push_tokens": met.push_tokens,
-        "broadcast_tokens": met.broadcast_tokens,
-        "cache_hit_rate": met.cache_hit_rate,
-        "n_fetches": met.n_fetches,
-        "n_writes": met.n_writes,
-        "n_reads": met.n_reads,
-        "max_staleness": met.max_staleness,
-        "max_version_lag": met.max_version_lag,
-    }
-
-
-def run_scenario(scn: ScenarioConfig) -> RunResult:
-    """Run ``scn.n_runs`` independent seeded episodes, vmapped."""
-    base = jax.random.PRNGKey(scn.seed)
-    keys = jax.vmap(lambda r: jax.random.fold_in(base, r))(
-        jnp.arange(scn.n_runs))
-    fn = jax.jit(jax.vmap(lambda k: _episode_metrics(scn.acs, k)))
-    out = jax.device_get(fn(keys))
-    total = np.asarray(out["total_tokens"], dtype=np.float64)
-    chr_ = np.asarray(out["cache_hit_rate"], dtype=np.float64)
-    stats = RunStats(
-        name=scn.name,
-        strategy=acs.STRATEGY_NAMES[scn.acs.strategy],
-        n_runs=scn.n_runs,
-        total_tokens_mean=float(total.mean()),
-        total_tokens_std=float(total.std()),
-        sync_tokens_mean=float(np.mean(out["sync_tokens"])),
-        sync_tokens_std=float(np.std(np.asarray(
-            out["sync_tokens"], dtype=np.float64))),
-        fetch_tokens_mean=float(np.mean(out["fetch_tokens"])),
-        signal_tokens_mean=float(np.mean(out["signal_tokens"])),
-        push_tokens_mean=float(np.mean(out["push_tokens"])),
-        broadcast_tokens_mean=float(np.mean(out["broadcast_tokens"])),
-        cache_hit_rate_mean=float(chr_.mean()),
-        cache_hit_rate_std=float(chr_.std()),
-        n_fetches_mean=float(np.mean(out["n_fetches"])),
-        n_writes_mean=float(np.mean(out["n_writes"])),
-        n_reads_mean=float(np.mean(out["n_reads"])),
-        max_staleness_max=int(np.max(out["max_staleness"])),
-        max_version_lag_max=int(np.max(out["max_version_lag"])),
-    )
-    return RunResult(stats=stats, per_run_total_tokens=total,
-                     per_run_chr=chr_)
-
-
 @dataclasses.dataclass(frozen=True)
 class Comparison:
     """Coherent strategy vs broadcast baseline for one scenario."""
@@ -134,14 +183,211 @@ class Comparison:
     chr_std: float
 
 
-def compare(scn: ScenarioConfig, strategy_code: Optional[int] = None
-            ) -> Comparison:
-    """Run broadcast + coherent variants of one scenario."""
-    coh_scn = scn if strategy_code is None else scn.with_strategy(
-        strategy_code)
-    bc = run_scenario(scn.with_strategy(acs.BROADCAST))
-    co = run_scenario(coh_scn)
-    savings_runs = 1.0 - co.per_run_total_tokens / bc.stats.total_tokens_mean
+# ---------------------------------------------------------------------------
+# Episode programs.
+
+
+def _episode_metrics(cfg: acs.ACSConfig, key: jax.Array,
+                     volatility=None, p_act=None) -> dict:
+    met = acs.run_episode(cfg, key, volatility=volatility, p_act=p_act)
+    return {
+        "total_tokens": met.total_tokens,
+        "sync_tokens": met.sync_tokens,
+        "fetch_tokens": met.fetch_tokens,
+        "signal_tokens": met.signal_tokens,
+        "push_tokens": met.push_tokens,
+        "broadcast_tokens": met.broadcast_tokens,
+        "cache_hit_rate": met.cache_hit_rate,
+        "n_fetches": met.n_fetches,
+        "n_writes": met.n_writes,
+        "n_reads": met.n_reads,
+        "max_staleness": met.max_staleness,
+        "max_version_lag": met.max_version_lag,
+    }
+
+
+def _episodes_pallas(cfg: acs.ACSConfig, keys: jax.Array, vols: jax.Array,
+                     p_acts: jax.Array) -> dict:
+    """B episodes through the batched Pallas MESI tick.
+
+    ``keys`` (B, 2) uint32, ``vols`` / ``p_acts`` (B,) traced scalars.
+    Returns the metrics dict of (B,) arrays.  Staleness diagnostics
+    (``max_staleness`` / ``max_version_lag``) are not tracked by the
+    kernel and report the ``-1`` not-tracked sentinel - this is the
+    throughput path for token-traffic metrics; use the scan path when
+    auditing staleness invariants.
+    """
+    B = keys.shape[0]
+    n, m = cfg.n_agents, cfg.n_artifacts
+    step_keys = jax.vmap(lambda k: jax.random.split(k, cfg.n_steps))(keys)
+    step_keys = jnp.swapaxes(step_keys, 0, 1)        # (S, B, 2)
+
+    def draw(k, v, p):
+        # Same split order as acs.tick, so the action streams (and hence
+        # all token counters) match the scan path bit-for-bit.
+        k_act, k_art, k_wr = jax.random.split(k, 3)
+        a = jax.random.bernoulli(k_act, p, (n,)).astype(jnp.int32)
+        d = jax.random.randint(k_art, (n,), 0, m)
+        w = jax.random.bernoulli(k_wr, v, (n,)).astype(jnp.int32)
+        return a, d, w
+
+    def body(carry, ks):
+        state, version, sync, reads, counters, n_reads, n_writes = carry
+        a, d, w = jax.vmap(draw)(ks, vols, p_acts)
+        state, version, sync, reads, cnt = mesi_tick_pallas(
+            state, version, sync, reads, a, d, w,
+            artifact_tokens=cfg.artifact_tokens,
+            eager=cfg.strategy == acs.EAGER,
+            access_k=cfg.access_k
+            if cfg.strategy == acs.ACCESS_COUNT else 0,
+            signal_tokens=acs.SIGNAL_TOKENS)
+        counters = counters + cnt
+        n_reads = n_reads + jnp.sum(a * (1 - w), axis=1)
+        n_writes = n_writes + jnp.sum(a * w, axis=1)
+        return (state, version, sync, reads, counters,
+                n_reads, n_writes), None
+
+    init = (
+        jnp.full((B, n, m), _I, jnp.int32),
+        jnp.ones((B, m), jnp.int32),
+        jnp.zeros((B, n, m), jnp.int32),
+        jnp.zeros((B, n, m), jnp.int32),
+        jnp.zeros((B, N_COUNTERS), jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+    )
+    (_, _, _, _, counters, n_reads, n_writes), _ = jax.lax.scan(
+        body, init, step_keys)
+
+    fetch, signal, push = counters[:, 0], counters[:, 1], counters[:, 2]
+    n_fetches, n_hits = counters[:, 3], counters[:, 4]
+    z = jnp.zeros((B,), jnp.int32)
+    untracked = jnp.full((B,), -1, jnp.int32)   # sentinel, see docstring
+    denom = jnp.maximum(n_hits + n_fetches, 1)
+    return {
+        "total_tokens": fetch + signal + push,
+        "sync_tokens": fetch + signal,
+        "fetch_tokens": fetch,
+        "signal_tokens": signal,
+        "push_tokens": push,
+        "broadcast_tokens": z,
+        "cache_hit_rate": n_hits.astype(jnp.float32) / denom,
+        "n_fetches": n_fetches,
+        "n_writes": n_writes,
+        "n_reads": n_reads,
+        "max_staleness": untracked,
+        "max_version_lag": untracked,
+    }
+
+
+def _grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
+             tick_backend: str):
+    """Cached jitted grid program for one static configuration.
+
+    Signature of the returned callable::
+
+        fn(vols (V,), p_acts (V,), keys (V, R, 2))
+            -> dict of (n_variants, V, R) arrays
+
+    Variant axis: ``[broadcast, coherent]`` when ``include_broadcast``,
+    else ``[coherent]`` - the baseline runs *inside* the same XLA
+    program as the coherent variant (one compilation, one launch).
+    """
+    if tick_backend == "pallas" and not _pallas_tick_supported(cfg):
+        # The kernel only implements the invalidation strategies; a
+        # forced "pallas" on TTL/broadcast/K-staleness configs would
+        # silently compute lazy semantics.
+        tick_backend = "scan"
+    cache_key = (_static_key(cfg), include_broadcast, tick_backend)
+    fn = _GRID_CACHE.get(cache_key)
+    if fn is not None:
+        return fn
+    bc_cfg = dataclasses.replace(cfg, strategy=acs.BROADCAST)
+
+    def scan_variant(vcfg, vols, p_acts, keys):
+        def cell(v, p, ks):
+            return jax.vmap(
+                lambda k: _episode_metrics(vcfg, k, v, p))(ks)
+        return jax.vmap(cell)(vols, p_acts, keys)
+
+    def pallas_variant(vcfg, vols, p_acts, keys):
+        V, R = keys.shape[0], keys.shape[1]
+        out = _episodes_pallas(
+            vcfg, keys.reshape(V * R, keys.shape[2]),
+            jnp.repeat(vols, R), jnp.repeat(p_acts, R))
+        return {k: a.reshape(V, R) for k, a in out.items()}
+
+    coherent = pallas_variant if tick_backend == "pallas" else scan_variant
+
+    def run_grid(vols, p_acts, keys):
+        _note_trace()
+        outs = []
+        if include_broadcast:
+            # Broadcast is a bulk-inject path with no per-agent kernel;
+            # it always takes the scan variant.
+            outs.append(scan_variant(bc_cfg, vols, p_acts, keys))
+        outs.append(coherent(cfg, vols, p_acts, keys))
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+    fn = jax.jit(run_grid)
+    _GRID_CACHE[cache_key] = fn
+    return fn
+
+
+def _grid_keys(seeds: Sequence[int], n_runs: int) -> jax.Array:
+    """(V, R, 2) uint32 key grid: ``fold_in(PRNGKey(seed_v), r)`` -
+    exactly the per-run key schedule of the per-cell path, so fused
+    sweeps reproduce loop results bit-for-bit."""
+    rs = jnp.arange(n_runs)
+
+    def per_seed(seed: int) -> jax.Array:
+        base = jax.random.PRNGKey(int(seed))
+        return jax.vmap(lambda r: jax.random.fold_in(base, r))(rs)
+
+    return jnp.stack([per_seed(s) for s in seeds])
+
+
+# ---------------------------------------------------------------------------
+# Host-side aggregation.
+
+
+def _result_from(cell: dict, name: str, strategy_name: str,
+                 n_runs: int) -> RunResult:
+    total = np.asarray(cell["total_tokens"], dtype=np.float64)
+    chr_ = np.asarray(cell["cache_hit_rate"], dtype=np.float64)
+    stats = RunStats(
+        name=name,
+        strategy=strategy_name,
+        n_runs=n_runs,
+        total_tokens_mean=float(total.mean()),
+        total_tokens_std=float(total.std()),
+        sync_tokens_mean=float(np.mean(cell["sync_tokens"])),
+        sync_tokens_std=float(np.std(np.asarray(
+            cell["sync_tokens"], dtype=np.float64))),
+        fetch_tokens_mean=float(np.mean(cell["fetch_tokens"])),
+        signal_tokens_mean=float(np.mean(cell["signal_tokens"])),
+        push_tokens_mean=float(np.mean(cell["push_tokens"])),
+        broadcast_tokens_mean=float(np.mean(cell["broadcast_tokens"])),
+        cache_hit_rate_mean=float(chr_.mean()),
+        cache_hit_rate_std=float(chr_.std()),
+        n_fetches_mean=float(np.mean(cell["n_fetches"])),
+        n_writes_mean=float(np.mean(cell["n_writes"])),
+        n_reads_mean=float(np.mean(cell["n_reads"])),
+        max_staleness_max=int(np.max(cell["max_staleness"])),
+        max_version_lag_max=int(np.max(cell["max_version_lag"])),
+    )
+    return RunResult(stats=stats, per_run_total_tokens=total,
+                     per_run_chr=chr_)
+
+
+def _cell(out: dict, variant: int, v: int) -> dict:
+    return {k: np.asarray(a)[variant, v] for k, a in out.items()}
+
+
+def _comparison_from(scn: ScenarioConfig, bc: RunResult,
+                     co: RunResult) -> Comparison:
+    savings_runs = (1.0 - co.per_run_total_tokens
+                    / bc.stats.total_tokens_mean)
     return Comparison(
         scenario=scn.name,
         volatility=scn.acs.volatility,
@@ -156,18 +402,92 @@ def compare(scn: ScenarioConfig, strategy_code: Optional[int] = None
     )
 
 
-def sweep_volatility(base_scn: ScenarioConfig, volatilities,
-                     n_runs: Optional[int] = None) -> list[Comparison]:
-    """Vectorized V-sweep: one jitted program per strategy, vmapped over
-    (volatility x run).  Volatility is a *traced* Bernoulli parameter, so
-    a single compilation covers the whole sweep - the fleet-scale path."""
-    import dataclasses as dc
+# ---------------------------------------------------------------------------
+# Public API.
+
+
+def run_scenario(scn: ScenarioConfig,
+                 tick_backend: Optional[str] = None) -> RunResult:
+    """Run ``scn.n_runs`` independent seeded episodes, vmapped.
+
+    Uses the module-level jit cache: repeated calls with the same static
+    configuration (any volatility / p_act / seed) reuse one compiled
+    program.
+    """
+    backend = tick_backend or resolve_tick_backend(scn.acs, scn.n_runs)
+    fn = _grid_fn(scn.acs, include_broadcast=False, tick_backend=backend)
+    out = jax.device_get(fn(
+        jnp.asarray([scn.acs.volatility], jnp.float32),
+        jnp.asarray([scn.acs.p_act], jnp.float32),
+        _grid_keys([scn.seed], scn.n_runs)))
+    return _result_from(
+        _cell(out, 0, 0), scn.name,
+        acs.STRATEGY_NAMES[scn.acs.strategy], scn.n_runs)
+
+
+def compare_grid(scns: Sequence[ScenarioConfig],
+                 tick_backend: Optional[str] = None) -> list[Comparison]:
+    """Broadcast-vs-coherent for many scenarios, fused.
+
+    Scenarios sharing a static signature (and n_runs) are batched into a
+    single XLA program: variant x scenario x run.  Heterogeneous lists
+    still work - each static group compiles once.
+    """
+    groups: dict = {}
+    for i, s in enumerate(scns):
+        groups.setdefault((_static_key(s.acs), s.n_runs), []).append(i)
+    results: list = [None] * len(scns)
+    for (_, n_runs), idxs in groups.items():
+        sub = [scns[i] for i in idxs]
+        cfg = sub[0].acs
+        # Only the coherent variant can take the kernel (broadcast is a
+        # bulk-inject scan path), so size the threshold on that half.
+        backend = tick_backend or resolve_tick_backend(
+            cfg, len(sub) * n_runs)
+        fn = _grid_fn(cfg, include_broadcast=True, tick_backend=backend)
+        out = jax.device_get(fn(
+            jnp.asarray([s.acs.volatility for s in sub], jnp.float32),
+            jnp.asarray([s.acs.p_act for s in sub], jnp.float32),
+            _grid_keys([s.seed for s in sub], n_runs)))
+        for j, i in enumerate(idxs):
+            bc = _result_from(_cell(out, 0, j), sub[j].name,
+                              acs.STRATEGY_NAMES[acs.BROADCAST], n_runs)
+            co = _result_from(_cell(out, 1, j), sub[j].name,
+                              acs.STRATEGY_NAMES[cfg.strategy], n_runs)
+            results[i] = _comparison_from(sub[j], bc, co)
+    return results
+
+
+def compare(scn: ScenarioConfig, strategy_code: Optional[int] = None,
+            tick_backend: Optional[str] = None) -> Comparison:
+    """Run broadcast + coherent variants of one scenario (one program)."""
+    coh_scn = scn if strategy_code is None else scn.with_strategy(
+        strategy_code)
+    return compare_grid([coh_scn], tick_backend=tick_backend)[0]
+
+
+def sweep_cells(base_scn: ScenarioConfig, volatilities,
+                n_runs: Optional[int] = None) -> list[ScenarioConfig]:
+    """The per-volatility scenario cells of a V-sweep (deterministic
+    per-cell seeds derived from the base seed).  Single source of truth
+    for the grid both the fused path and any loop baseline run over."""
     runs = n_runs or base_scn.n_runs
-    out = []
-    for v in volatilities:
-        scn = dc.replace(
-            base_scn, acs=dc.replace(base_scn.acs, volatility=float(v)),
-            n_runs=runs,
-            seed=base_scn.seed + int(round(float(v) * 1000)))
-        out.append(compare(scn))
-    return out
+    return [dataclasses.replace(
+        base_scn,
+        acs=dataclasses.replace(base_scn.acs, volatility=float(v)),
+        n_runs=runs,
+        seed=base_scn.seed + int(round(float(v) * 1000)))
+        for v in volatilities]
+
+
+def sweep_volatility(base_scn: ScenarioConfig, volatilities,
+                     n_runs: Optional[int] = None,
+                     tick_backend: Optional[str] = None
+                     ) -> list[Comparison]:
+    """Fused V-sweep: ONE jitted program for the whole
+    ``(variant x volatility x run)`` grid.  Volatility is a traced
+    Bernoulli parameter, so a single compilation covers the sweep and is
+    reused across sweeps of any volatility values - the fleet-scale
+    path."""
+    return compare_grid(sweep_cells(base_scn, volatilities, n_runs),
+                        tick_backend=tick_backend)

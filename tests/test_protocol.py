@@ -4,6 +4,7 @@ exact token-ledger equivalence with the vectorized ACS simulator."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import acs
