@@ -32,6 +32,7 @@ MODULES = {
     "table4_artifact_size": "table4",
     "table5_step_scaling": "table5",
     "volatility_cliff": "cliff",
+    "workload_zoo": "zoo",
     "pointer_semantics": "pointer",
     "prompt_cache_amplification": "promptcache",
     "staleness_tradeoff": "staleness",

@@ -1,0 +1,142 @@
+"""Workload-zoo benchmark: savings-vs-broadcast per workload family.
+
+Runs the heterogeneous workload generator (``repro.sim.workloads``)
+through the fused engine: the whole zoo - every family, broadcast
+baseline included - is ONE compiled (variant x workload x run) XLA
+program with the rate matrices as traced axes
+(``engine.compare_workloads``), and the compile count is asserted via
+``engine.trace_counter``.
+
+Writes ``BENCH_workloads.json`` at the repo root (schema in
+``benchmarks/README.md``) so per-family savings are tracked across
+PRs, plus the usual markdown/JSON under ``benchmarks/results/``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+from benchmarks.common import (BenchRow, bench_iters, bench_runs,
+                               bench_steps, fast_mode, fmt_pct, md_table,
+                               write_results)
+from repro.sim import engine, resolve_tick_backend, workloads
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_JSON = REPO_ROOT / "BENCH_workloads.json"
+
+#: the measured zoo grid (fast mode shrinks runs/steps, never families).
+N_AGENTS = 8
+N_ARTIFACTS = 6
+N_RUNS = 10
+N_STEPS = 40
+ARTIFACT_TOKENS = 4096
+
+
+def _zoo() -> list[workloads.Workload]:
+    return workloads.zoo(
+        n_agents=N_AGENTS, n_artifacts=N_ARTIFACTS,
+        n_runs=bench_runs(N_RUNS), artifact_tokens=ARTIFACT_TOKENS,
+        n_steps=bench_steps(N_STEPS))
+
+
+def run() -> list[BenchRow]:
+    zoo = _zoo()
+    n_episodes = len(zoo) * 2 * zoo[0].n_runs
+    # resolved with the same batch compare_workloads sizes the coherent
+    # half on (broadcast never takes the kernel), so the payload records
+    # the route the episodes actually ran.
+    tick_backend = resolve_tick_backend(zoo[0].acs,
+                                        len(zoo) * zoo[0].n_runs)
+    iters = bench_iters(3)
+
+    with engine.trace_counter() as tc:
+        t0 = time.perf_counter()
+        cmps = engine.compare_workloads(zoo)
+        cold_s = time.perf_counter() - t0
+        compilations = tc.count
+        steady = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            cmps = engine.compare_workloads(zoo)
+            steady.append(time.perf_counter() - t0)
+        steady_s = sorted(steady)[len(steady) // 2]
+        recompiles = tc.count - compilations
+
+    families = []
+    for w, cmp_ in zip(zoo, cmps):
+        families.append({
+            "family": w.family,
+            "name": w.name,
+            "description": w.description,
+            "effective_volatility": w.effective_volatility(),
+            "broadcast_total_mean": cmp_.broadcast.total_tokens_mean,
+            "coherent_total_mean": cmp_.coherent.total_tokens_mean,
+            "coherent_sync_mean": cmp_.coherent.sync_tokens_mean,
+            "coherent_push_mean": cmp_.coherent.push_tokens_mean,
+            "savings_mean": cmp_.savings_mean,
+            "savings_std": cmp_.savings_std,
+            "crr": cmp_.crr,
+            "cache_hit_rate_mean": cmp_.chr_mean,
+        })
+
+    payload = {
+        "schema_version": 1,
+        "fast_mode": fast_mode(),
+        "grid": {
+            "families": [w.family for w in zoo],
+            "n_agents": N_AGENTS,
+            "n_artifacts": N_ARTIFACTS,
+            "n_runs": zoo[0].n_runs,
+            "n_steps": zoo[0].acs.n_steps,
+            "artifact_tokens": ARTIFACT_TOKENS,
+            "strategy": "lazy",
+            "n_episodes": n_episodes,
+        },
+        "backend": jax.default_backend(),
+        "tick_backend": tick_backend,
+        "compilations": compilations,
+        "recompilations_steady": recompiles,
+        "cold_s": cold_s,
+        "steady_s": steady_s,
+        "sims_per_s": n_episodes / steady_s,
+        "families": families,
+    }
+    if not fast_mode():
+        # repo-root artifact = cross-PR trajectory; smoke runs (shrunk
+        # grid, opt-level-0 compiles) must not clobber it.
+        BENCH_JSON.write_text(json.dumps(payload, indent=2,
+                                         default=float))
+
+    table = [[f["family"], f"{f['effective_volatility']:.3f}",
+              f"{f['broadcast_total_mean'] / 1e3:,.1f} K",
+              f"{f['coherent_total_mean'] / 1e3:,.1f} K",
+              fmt_pct(f["savings_mean"], f["savings_std"]),
+              fmt_pct(f["cache_hit_rate_mean"])]
+             for f in families]
+    md = ("### Workload zoo - savings vs broadcast per family\n\n"
+          + md_table(["family", "eff. V", "broadcast", "coherent",
+                      "savings", "CHR"], table)
+          + f"\nOne fused program: {compilations} compilation(s) for "
+          f"{len(zoo)} families x 2 variants x {zoo[0].n_runs} runs "
+          f"({payload['sims_per_s']:.1f} sims/s steady; backend "
+          f"{payload['backend']}, tick {payload['tick_backend']}).\n")
+
+    rows = [BenchRow(
+        name=f"zoo/{f['family']}",
+        us_per_call=steady_s * 1e6 / n_episodes,
+        derived=f"savings={f['savings_mean'] * 100:.1f}%")
+        for f in families]
+    rows.append(BenchRow(name="zoo/engine",
+                         us_per_call=steady_s * 1e6 / n_episodes,
+                         derived=f"compiles={compilations}"))
+    write_results("workload_zoo", rows, md, extra=payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

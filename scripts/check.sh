@@ -15,7 +15,7 @@ python -m pytest -x -q
 
 echo
 echo "== smoke benches (REPRO_BENCH_FAST=1) =="
-REPRO_BENCH_FAST=1 python -m benchmarks.run sweep table1 table2 cliff
+REPRO_BENCH_FAST=1 python -m benchmarks.run sweep table1 table2 cliff zoo
 
 echo
 echo "check.sh: OK"

@@ -2,8 +2,9 @@
 
 from repro.core.states import MESIState, CoherenceEvent, TRANSITION_TABLE
 from repro.core.acs import (
-    ACSConfig, ACSArrays, ACSMetrics, init_arrays, init_metrics, tick,
-    run_episode, BROADCAST, EAGER, LAZY, TTL, ACCESS_COUNT,
+    ACSConfig, ACSArrays, ACSMetrics, RateMatrices, init_arrays,
+    init_metrics, tick, run_episode, draw_actions, uniform_rates,
+    BROADCAST, EAGER, LAZY, TTL, ACCESS_COUNT,
     STRATEGY_NAMES, STRATEGY_CODES, SIGNAL_TOKENS,
 )
 from repro.core import theorem, invariants, model_check, strategies
@@ -16,8 +17,9 @@ from repro.core.clock import VectorClock, MonotonicVersioner
 
 __all__ = [
     "MESIState", "CoherenceEvent", "TRANSITION_TABLE",
-    "ACSConfig", "ACSArrays", "ACSMetrics", "init_arrays", "init_metrics",
-    "tick", "run_episode", "BROADCAST", "EAGER", "LAZY", "TTL",
+    "ACSConfig", "ACSArrays", "ACSMetrics", "RateMatrices", "init_arrays",
+    "init_metrics", "tick", "run_episode", "draw_actions", "uniform_rates",
+    "BROADCAST", "EAGER", "LAZY", "TTL",
     "ACCESS_COUNT", "STRATEGY_NAMES", "STRATEGY_CODES", "SIGNAL_TOKENS",
     "theorem", "invariants", "model_check", "strategies",
     "Message", "EventBus", "ArtifactStore", "CoordinatorService",

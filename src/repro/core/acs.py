@@ -79,6 +79,60 @@ class ACSConfig:
     max_stale_steps: int = 0         # 0 disables K-staleness enforcement
 
 
+class RateMatrices(NamedTuple):
+    """Heterogeneous workload rates - the traced generalization of the
+    scalar ``(p_act, volatility)`` pair (paper SS8.1 uses scalars only).
+
+    All three are *traced* tensor inputs of the fused sweep path, so one
+    compiled grid program serves every workload family that shares a
+    static shape.  Rows of ``exp(log_pick)`` sum to 1.
+    """
+
+    p_act: jax.Array       # (n,)   per-agent act probability
+    log_pick: jax.Array    # (n, m) log artifact-selection probabilities
+    write_rate: jax.Array  # (n, m) P(write | agent a picked artifact d)
+
+
+def uniform_rates(cfg: ACSConfig) -> RateMatrices:
+    """The scalar scenario expressed as rate matrices (for tests that
+    cross-check the heterogeneous path against the homogeneous one)."""
+    n, m = cfg.n_agents, cfg.n_artifacts
+    return RateMatrices(
+        p_act=jnp.full((n,), cfg.p_act, jnp.float32),
+        log_pick=jnp.full((n, m), -jnp.log(float(m)), jnp.float32),
+        write_rate=jnp.full((n, m), cfg.volatility, jnp.float32),
+    )
+
+
+def draw_actions(key: jax.Array, n_agents: int, n_artifacts: int,
+                 volatility, p_act, rates: RateMatrices | None = None):
+    """Sample one step's (acts, arts, writes) for every agent.
+
+    The single source of truth for action sampling: the scan tick, the
+    Pallas episode route and the differential-conformance trace sampler
+    (``repro.sim.oracle``) all call this, so a fixed key yields the same
+    action stream everywhere - the property the four-way conformance
+    harness rests on.
+
+    Scalar path (``rates is None``): Bernoulli(p_act) activity, uniform
+    artifact choice, Bernoulli(volatility) writes - bit-identical to the
+    original homogeneous sampler.  Heterogeneous path: per-agent
+    Bernoulli activity, per-agent categorical artifact choice, and a
+    write probability looked up at the chosen (agent, artifact) cell.
+    """
+    k_act, k_art, k_wr = jax.random.split(key, 3)
+    if rates is None:
+        acts = jax.random.bernoulli(k_act, p_act, (n_agents,))
+        arts = jax.random.randint(k_art, (n_agents,), 0, n_artifacts)
+        writes = jax.random.bernoulli(k_wr, volatility, (n_agents,))
+    else:
+        acts = jax.random.bernoulli(k_act, rates.p_act, (n_agents,))
+        arts = jax.random.categorical(k_art, rates.log_pick, axis=-1)
+        w_p = rates.write_rate[jnp.arange(n_agents), arts]
+        writes = jax.random.bernoulli(k_wr, w_p, (n_agents,))
+    return acts, arts.astype(jnp.int32), writes
+
+
 class ACSArrays(NamedTuple):
     """alpha and the bookkeeping the strategies need (all int32)."""
 
@@ -102,6 +156,10 @@ class ACSMetrics(NamedTuple):
     n_invalidation_signals: jax.Array
     max_staleness: jax.Array
     max_version_lag: jax.Array
+    #: largest action-clock staleness a *served* cache hit carried, i.e.
+    #: after any forced revalidation (Invariant 3 enforcement surface:
+    #: with ``max_stale_steps = K > 0`` this never exceeds K).
+    max_consumed_staleness: jax.Array
 
     @property
     def total_tokens(self) -> jax.Array:
@@ -141,7 +199,7 @@ def init_arrays(cfg: ACSConfig) -> ACSArrays:
 
 def init_metrics() -> ACSMetrics:
     z = jnp.zeros((), jnp.int32)
-    return ACSMetrics(z, z, z, z, z, z, z, z, z, z, z)
+    return ACSMetrics(*([z] * len(ACSMetrics._fields)))
 
 
 def _entry_expired(cfg: ACSConfig, arrays: ACSArrays, a, d) -> jax.Array:
@@ -212,7 +270,13 @@ def _access(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics, a, d):
 
     def on_hit(args):
         arrays, met = args
-        met = met._replace(n_hits=met.n_hits + 1)
+        # Staleness the consumer actually sees: re-read last_validate
+        # AFTER any forced revalidation above reset it.
+        consumed = arrays.agent_actions[a] - arrays.last_validate[a, d]
+        met = met._replace(
+            n_hits=met.n_hits + 1,
+            max_consumed_staleness=jnp.maximum(
+                met.max_consumed_staleness, consumed))
         return arrays, met
 
     return jax.lax.cond(miss, on_miss, on_hit, (arrays, met))
@@ -280,21 +344,22 @@ def _do_write(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
 
 def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
          key: jax.Array, step: jax.Array,
-         volatility=None, p_act=None):
+         volatility=None, p_act=None, rates: RateMatrices | None = None):
     """One orchestration step for every agent (serialized authority).
 
     ``volatility`` and ``p_act`` default to the static config values but
     may be passed as *traced* scalars, so one compiled program can serve
     a whole ``(volatility x run)`` sweep grid (the fleet-scale path in
-    ``repro.sim.engine``).  Strategy and the shape-determining fields
-    stay static - they select code, not data.
+    ``repro.sim.engine``).  ``rates`` generalizes both to traced
+    per-agent x per-artifact matrices (heterogeneous workloads,
+    ``repro.sim.workloads``) and takes precedence when given.  Strategy
+    and the shape-determining fields stay static - they select code,
+    not data.
     """
     volatility = cfg.volatility if volatility is None else volatility
     p_act = cfg.p_act if p_act is None else p_act
-    k_act, k_art, k_wr = jax.random.split(key, 3)
-    acts = jax.random.bernoulli(k_act, p_act, (cfg.n_agents,))
-    arts = jax.random.randint(k_art, (cfg.n_agents,), 0, cfg.n_artifacts)
-    writes = jax.random.bernoulli(k_wr, volatility, (cfg.n_agents,))
+    acts, arts, writes = draw_actions(
+        key, cfg.n_agents, cfg.n_artifacts, volatility, p_act, rates)
 
     if cfg.strategy == BROADCAST:
         # Full-state rebroadcast: every agent receives every artifact.
@@ -314,7 +379,8 @@ def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
         # clock (expected n*p_act action events per step).  All resident
         # subscriptions are refreshed each epoch; entries never expire
         # mid-epoch, so write activity is irrelevant (SS5.5 TTL).
-        rate = cfg.n_agents * p_act
+        rate = (jnp.sum(rates.p_act) if rates is not None
+                else cfg.n_agents * p_act)
         epoch_now = jnp.floor(rate * step.astype(jnp.float32)
                               / cfg.ttl_events).astype(jnp.int32)
         epoch_prev = jnp.where(
@@ -380,10 +446,12 @@ def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
 
 
 def run_episode(cfg: ACSConfig, key: jax.Array,
-                volatility=None, p_act=None) -> ACSMetrics:
+                volatility=None, p_act=None,
+                rates: RateMatrices | None = None) -> ACSMetrics:
     """Run a full S-step episode; returns final metrics.
 
-    ``volatility`` / ``p_act`` may be traced scalars (see ``tick``).
+    ``volatility`` / ``p_act`` may be traced scalars and ``rates`` a
+    traced heterogeneous rate-matrix triple (see ``tick``).
     """
     arrays = init_arrays(cfg)
     met = init_metrics()
@@ -393,7 +461,8 @@ def run_episode(cfg: ACSConfig, key: jax.Array,
         arrays, met = carry
         step, k = inp
         arrays, met = tick(cfg, arrays, met, k, step,
-                           volatility=volatility, p_act=p_act)
+                           volatility=volatility, p_act=p_act,
+                           rates=rates)
         return (arrays, met), None
 
     steps = jnp.arange(cfg.n_steps, dtype=jnp.int32)

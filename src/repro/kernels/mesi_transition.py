@@ -15,7 +15,8 @@ fully static shapes - the standard TPU answer to data-dependent
 indexing.
 
 Counters layout (out[..., c]): 0 fetch_tokens, 1 signal_tokens,
-2 push_tokens, 3 n_fetches, 4 n_hits; 5-7 reserved (zero).
+2 push_tokens, 3 n_fetches, 4 n_hits, 5 n_invalidation_signals;
+6-7 reserved (zero).
 """
 
 from __future__ import annotations
@@ -90,6 +91,7 @@ def _mesi_kernel(state_ref, version_ref, sync_ref, reads_ref,
             jnp.logical_and(wmask, peer), state != _I)
         n_peers = jnp.sum(peer_valid.astype(jnp.int32), axis=(1, 2))
         counters = counters.at[:, 1].add(signal_tokens * n_peers)
+        counters = counters.at[:, 5].add(n_peers)
         state = jnp.where(peer_valid, _I, state)
 
         new_ver = jnp.where(jnp.logical_and(is_write[:, None], d_oh),

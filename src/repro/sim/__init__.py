@@ -8,8 +8,13 @@ from repro.sim.scenarios import (
 )
 from repro.sim.engine import (
     RunStats, RunResult, Comparison, run_scenario, compare, compare_grid,
-    sweep_volatility, sweep_cells, trace_count, reset_trace_count,
+    compare_workloads, run_workload, sweep_volatility, sweep_cells,
+    trace_count, reset_trace_count, trace_counter, TraceCounter,
     clear_compile_cache, resolve_tick_backend,
+)
+from repro.sim.workloads import (
+    Workload, FAMILIES, FAMILY_SEEDS, make, zoo, random_workload,
+    zipf_weights,
 )
 
 __all__ = [
@@ -19,6 +24,10 @@ __all__ = [
     "artifact_size_scenario", "step_scaling_scenario",
     "pointer_semantics_scenario",
     "RunStats", "RunResult", "Comparison", "run_scenario", "compare",
-    "compare_grid", "sweep_volatility", "sweep_cells", "trace_count",
-    "reset_trace_count", "clear_compile_cache", "resolve_tick_backend",
+    "compare_grid", "compare_workloads", "run_workload",
+    "sweep_volatility", "sweep_cells", "trace_count",
+    "reset_trace_count", "trace_counter", "TraceCounter",
+    "clear_compile_cache", "resolve_tick_backend",
+    "Workload", "FAMILIES", "FAMILY_SEEDS", "make", "zoo",
+    "random_workload", "zipf_weights",
 ]

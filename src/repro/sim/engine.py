@@ -7,7 +7,10 @@ program.  Three mechanisms make that possible:
   1. **Traced sweep axes.**  ``volatility`` and ``p_act`` (and the PRNG
      key, as always) are traced scalars of the episode runner
      (``repro.core.acs.run_episode``), so a single compiled program
-     covers every point of a volatility sweep.  Strategy and the
+     covers every point of a volatility sweep - and the heterogeneous
+     generalization (``compare_workloads``) traces whole per-agent x
+     per-artifact rate matrices the same way, so one program covers an
+     entire zoo of workload families.  Strategy and the
      shape-determining fields (agents, artifacts, steps) stay static -
      they select code, not data.
   2. **Module-level jit cache.**  Compiled grid programs are cached per
@@ -31,6 +34,7 @@ paper does (10 runs, sigma over the population).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 from typing import Optional, Sequence
@@ -66,6 +70,35 @@ def trace_count() -> int:
 def reset_trace_count() -> None:
     global _TRACE_COUNT
     _TRACE_COUNT = 0
+
+
+class TraceCounter:
+    """Compilations observed since a fixed starting point (see
+    ``trace_counter``)."""
+
+    def __init__(self, start: int) -> None:
+        self._start = start
+
+    @property
+    def count(self) -> int:
+        return _TRACE_COUNT - self._start
+
+
+@contextlib.contextmanager
+def trace_counter(clear_cache: bool = True):
+    """Scoped compilation accounting.
+
+    ``trace_count`` is process-global: a bare ``reset_trace_count()`` in
+    one test module stomps the accounting every other module sees, so
+    recompile-guard assertions become import-order dependent.  This
+    context manager yields a ``TraceCounter`` whose ``.count`` is the
+    number of compilations *inside the with-block only* - no reset, no
+    cross-module leak.  ``clear_cache=True`` (default) also drops the
+    jit caches on entry so the block starts cold.
+    """
+    if clear_cache:
+        clear_compile_cache()
+    yield TraceCounter(_TRACE_COUNT)
 
 
 # ---------------------------------------------------------------------------
@@ -148,6 +181,9 @@ class RunStats:
     n_reads_mean: float
     max_staleness_max: int
     max_version_lag_max: int
+    #: worst staleness a served cache hit carried (post-revalidation);
+    #: ``-1`` on the Pallas tick path (not tracked there).
+    max_consumed_staleness_max: int = -1
 
     def savings_vs(self, baseline: "RunStats") -> float:
         return 1.0 - self.total_tokens_mean / baseline.total_tokens_mean
@@ -188,8 +224,9 @@ class Comparison:
 
 
 def _episode_metrics(cfg: acs.ACSConfig, key: jax.Array,
-                     volatility=None, p_act=None) -> dict:
-    met = acs.run_episode(cfg, key, volatility=volatility, p_act=p_act)
+                     volatility=None, p_act=None, rates=None) -> dict:
+    met = acs.run_episode(cfg, key, volatility=volatility, p_act=p_act,
+                          rates=rates)
     return {
         "total_tokens": met.total_tokens,
         "sync_tokens": met.sync_tokens,
@@ -203,37 +240,44 @@ def _episode_metrics(cfg: acs.ACSConfig, key: jax.Array,
         "n_reads": met.n_reads,
         "max_staleness": met.max_staleness,
         "max_version_lag": met.max_version_lag,
+        "max_consumed_staleness": met.max_consumed_staleness,
     }
 
 
 def _episodes_pallas(cfg: acs.ACSConfig, keys: jax.Array, vols: jax.Array,
-                     p_acts: jax.Array) -> dict:
+                     p_acts: jax.Array,
+                     rates: Optional[acs.RateMatrices] = None) -> dict:
     """B episodes through the batched Pallas MESI tick.
 
-    ``keys`` (B, 2) uint32, ``vols`` / ``p_acts`` (B,) traced scalars.
+    ``keys`` (B, 2) uint32, ``vols`` / ``p_acts`` (B,) traced scalars,
+    ``rates`` an optional batched ``RateMatrices`` ((B, n) / (B, n, m)
+    leaves; overrides the scalars - the heterogeneous workload route).
     Returns the metrics dict of (B,) arrays.  Staleness diagnostics
-    (``max_staleness`` / ``max_version_lag``) are not tracked by the
-    kernel and report the ``-1`` not-tracked sentinel - this is the
-    throughput path for token-traffic metrics; use the scan path when
-    auditing staleness invariants.
+    (``max_staleness`` / ``max_version_lag`` / ``max_consumed_staleness``)
+    are not tracked by the kernel and report the ``-1`` not-tracked
+    sentinel - this is the throughput path for token-traffic metrics;
+    use the scan path when auditing staleness invariants.
     """
     B = keys.shape[0]
     n, m = cfg.n_agents, cfg.n_artifacts
     step_keys = jax.vmap(lambda k: jax.random.split(k, cfg.n_steps))(keys)
     step_keys = jnp.swapaxes(step_keys, 0, 1)        # (S, B, 2)
 
-    def draw(k, v, p):
-        # Same split order as acs.tick, so the action streams (and hence
-        # all token counters) match the scan path bit-for-bit.
-        k_act, k_art, k_wr = jax.random.split(k, 3)
-        a = jax.random.bernoulli(k_act, p, (n,)).astype(jnp.int32)
-        d = jax.random.randint(k_art, (n,), 0, m)
-        w = jax.random.bernoulli(k_wr, v, (n,)).astype(jnp.int32)
-        return a, d, w
+    def draw(k, v, p, r):
+        # acs.draw_actions is the single sampling source of truth, so
+        # the action streams (and hence all token counters) match the
+        # scan path bit-for-bit.
+        a, d, w = acs.draw_actions(k, n, m, v, p, r)
+        return a.astype(jnp.int32), d, w.astype(jnp.int32)
 
     def body(carry, ks):
         state, version, sync, reads, counters, n_reads, n_writes = carry
-        a, d, w = jax.vmap(draw)(ks, vols, p_acts)
+        if rates is None:
+            a, d, w = jax.vmap(
+                lambda k, v, p: draw(k, v, p, None))(ks, vols, p_acts)
+        else:
+            a, d, w = jax.vmap(
+                lambda k, r: draw(k, None, None, r))(ks, rates)
         state, version, sync, reads, cnt = mesi_tick_pallas(
             state, version, sync, reads, a, d, w,
             artifact_tokens=cfg.artifact_tokens,
@@ -277,6 +321,7 @@ def _episodes_pallas(cfg: acs.ACSConfig, keys: jax.Array, vols: jax.Array,
         "n_reads": n_reads,
         "max_staleness": untracked,
         "max_version_lag": untracked,
+        "max_consumed_staleness": untracked,
     }
 
 
@@ -334,6 +379,59 @@ def _grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
     return fn
 
 
+def _het_grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
+                 tick_backend: str):
+    """Cached jitted grid program for heterogeneous (rate-matrix)
+    workloads sharing one static configuration.
+
+    Signature of the returned callable::
+
+        fn(rates: RateMatrices with (W, n) / (W, n, m) leaves,
+           keys (W, R, 2)) -> dict of (n_variants, W, R) arrays
+
+    The rate matrices are *traced* tensor axes: one compilation covers
+    every workload family of the same static shape, and re-running with
+    different rates (new families, perturbed skews) retraces nothing.
+    Variant axis exactly as ``_grid_fn``.
+    """
+    if tick_backend == "pallas" and not _pallas_tick_supported(cfg):
+        tick_backend = "scan"
+    cache_key = ("het", _static_key(cfg), include_broadcast, tick_backend)
+    fn = _GRID_CACHE.get(cache_key)
+    if fn is not None:
+        return fn
+    bc_cfg = dataclasses.replace(cfg, strategy=acs.BROADCAST)
+
+    def scan_variant(vcfg, rates, keys):
+        def cell(r, ks):
+            return jax.vmap(
+                lambda k: _episode_metrics(vcfg, k, rates=r))(ks)
+        return jax.vmap(cell)(rates, keys)
+
+    def pallas_variant(vcfg, rates, keys):
+        W, R = keys.shape[0], keys.shape[1]
+        flat = jax.tree_util.tree_map(
+            lambda x: jnp.repeat(x, R, axis=0), rates)
+        out = _episodes_pallas(
+            vcfg, keys.reshape(W * R, keys.shape[2]),
+            None, None, rates=flat)
+        return {k: a.reshape(W, R) for k, a in out.items()}
+
+    coherent = pallas_variant if tick_backend == "pallas" else scan_variant
+
+    def run_grid(rates, keys):
+        _note_trace()
+        outs = []
+        if include_broadcast:
+            outs.append(scan_variant(bc_cfg, rates, keys))
+        outs.append(coherent(cfg, rates, keys))
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+    fn = jax.jit(run_grid)
+    _GRID_CACHE[cache_key] = fn
+    return fn
+
+
 def _grid_keys(seeds: Sequence[int], n_runs: int) -> jax.Array:
     """(V, R, 2) uint32 key grid: ``fold_in(PRNGKey(seed_v), r)`` -
     exactly the per-run key schedule of the per-cell path, so fused
@@ -375,6 +473,8 @@ def _result_from(cell: dict, name: str, strategy_name: str,
         n_reads_mean=float(np.mean(cell["n_reads"])),
         max_staleness_max=int(np.max(cell["max_staleness"])),
         max_version_lag_max=int(np.max(cell["max_version_lag"])),
+        max_consumed_staleness_max=int(
+            np.max(cell["max_consumed_staleness"])),
     )
     return RunResult(stats=stats, per_run_total_tokens=total,
                      per_run_chr=chr_)
@@ -384,13 +484,13 @@ def _cell(out: dict, variant: int, v: int) -> dict:
     return {k: np.asarray(a)[variant, v] for k, a in out.items()}
 
 
-def _comparison_from(scn: ScenarioConfig, bc: RunResult,
-                     co: RunResult) -> Comparison:
+def _comparison_of(name: str, volatility: float, bc: RunResult,
+                   co: RunResult) -> Comparison:
     savings_runs = (1.0 - co.per_run_total_tokens
                     / bc.stats.total_tokens_mean)
     return Comparison(
-        scenario=scn.name,
-        volatility=scn.acs.volatility,
+        scenario=name,
+        volatility=volatility,
         strategy=co.stats.strategy,
         broadcast=bc.stats,
         coherent=co.stats,
@@ -400,6 +500,11 @@ def _comparison_from(scn: ScenarioConfig, bc: RunResult,
         chr_mean=co.stats.cache_hit_rate_mean,
         chr_std=co.stats.cache_hit_rate_std,
     )
+
+
+def _comparison_from(scn: ScenarioConfig, bc: RunResult,
+                     co: RunResult) -> Comparison:
+    return _comparison_of(scn.name, scn.acs.volatility, bc, co)
 
 
 # ---------------------------------------------------------------------------
@@ -478,6 +583,58 @@ def sweep_cells(base_scn: ScenarioConfig, volatilities,
         n_runs=runs,
         seed=base_scn.seed + int(round(float(v) * 1000)))
         for v in volatilities]
+
+
+def _rate_stack(workloads) -> acs.RateMatrices:
+    """Stack per-workload rate matrices along a leading W axis."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[w.rates() for w in workloads])
+
+
+def compare_workloads(workloads, tick_backend: Optional[str] = None
+                      ) -> list["Comparison"]:
+    """Broadcast-vs-coherent for heterogeneous workloads, fused.
+
+    ``workloads``: ``repro.sim.workloads.Workload`` instances (anything
+    with ``.acs``, ``.seed``, ``.n_runs``, ``.name``,
+    ``.effective_volatility()`` and ``.rates()`` works).  Workloads
+    sharing a static signature (and n_runs) batch into a single XLA
+    program - variant x workload x run - with the rate matrices as
+    traced axes, so an entire zoo of families costs ONE compilation and
+    re-running with new or perturbed families costs zero more.
+    """
+    groups: dict = {}
+    for i, w in enumerate(workloads):
+        groups.setdefault((_static_key(w.acs), w.n_runs), []).append(i)
+    results: list = [None] * len(workloads)
+    for (_, n_runs), idxs in groups.items():
+        sub = [workloads[i] for i in idxs]
+        cfg = sub[0].acs
+        backend = tick_backend or resolve_tick_backend(
+            cfg, len(sub) * n_runs)
+        fn = _het_grid_fn(cfg, include_broadcast=True,
+                          tick_backend=backend)
+        out = jax.device_get(fn(
+            _rate_stack(sub), _grid_keys([w.seed for w in sub], n_runs)))
+        for j, i in enumerate(idxs):
+            bc = _result_from(_cell(out, 0, j), sub[j].name,
+                              acs.STRATEGY_NAMES[acs.BROADCAST], n_runs)
+            co = _result_from(_cell(out, 1, j), sub[j].name,
+                              acs.STRATEGY_NAMES[cfg.strategy], n_runs)
+            results[i] = _comparison_of(
+                sub[j].name, sub[j].effective_volatility(), bc, co)
+    return results
+
+
+def run_workload(w, tick_backend: Optional[str] = None) -> RunResult:
+    """Run one heterogeneous workload (no baseline), fused and cached."""
+    backend = tick_backend or resolve_tick_backend(w.acs, w.n_runs)
+    fn = _het_grid_fn(w.acs, include_broadcast=False,
+                      tick_backend=backend)
+    out = jax.device_get(fn(_rate_stack([w]),
+                            _grid_keys([w.seed], w.n_runs)))
+    return _result_from(_cell(out, 0, 0), w.name,
+                        acs.STRATEGY_NAMES[w.acs.strategy], w.n_runs)
 
 
 def sweep_volatility(base_scn: ScenarioConfig, volatilities,

@@ -1,0 +1,416 @@
+"""Four-way differential conformance oracle.
+
+The repo carries four independent executions of the CCS protocol:
+
+  1. the message-level reference implementation
+     (``repro.core.protocol``: coordinator / event bus / agent caches);
+  2. the vectorized JAX state machine (``repro.core.acs``);
+  3. the batched Pallas MESI tick (``repro.kernels.mesi_transition``);
+  4. the model checker's transition relation
+     (``repro.core.model_check.successors``).
+
+Each was only ever cross-checked pairwise on canonical scenarios.  This
+module samples ONE action trace from a (possibly heterogeneous)
+workload - using the exact PRNG key schedule of the fused sweep engine,
+so the trace is precisely what ``run_episode`` executes - and replays
+it through all four, asserting **bit-exact token-ledger and final
+MESI-state agreement**.  ``tests/differential`` drives it over the
+workload families; every future scaling PR is validated against it.
+
+Scope notes:
+
+  * The differential strategies are the invalidation family
+    (lazy / eager / access_count) - broadcast and TTL are bulk-inject
+    paths with no per-agent transition to diff.
+  * The model-checker leg covers LAZY only: the spec has no push
+    (eager) or expiry-refetch-from-valid (access_count) action.  It
+    verifies the trace is a *path* of the transition relation and that
+    the final abstract state agrees, under the abstraction
+    ``M -> S`` for the committed writer (the spec's Write leaves the
+    writer in M; the executable protocol commits the writer back to S,
+    paper SS5.3).
+  * The Pallas kernel tracks token counters, not the staleness
+    diagnostics; its ledger comparison covers every counter the kernel
+    emits (fetch/signal/push tokens, fetches, hits, invalidations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acs, model_check as mc
+from repro.core.protocol import (AgentRuntime, ArtifactStore,
+                                 CoordinatorService, EventBus)
+from repro.core.states import MESIState
+from repro.kernels.mesi_transition import mesi_tick_pallas
+
+_I, _S, _E, _M = (int(MESIState.I), int(MESIState.S),
+                  int(MESIState.E), int(MESIState.M))
+
+#: strategies the differential harness covers (see module docstring).
+DIFFERENTIAL_STRATEGIES = (acs.LAZY, acs.EAGER, acs.ACCESS_COUNT)
+
+
+class ConformanceError(AssertionError):
+    """Two implementations of the protocol disagreed on a trace."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """One sampled episode of actions, (n_steps, n_agents) arrays."""
+
+    acts: np.ndarray    # bool: agent a acted at step s
+    arts: np.ndarray    # int32: artifact chosen
+    writes: np.ndarray  # bool: action was a write
+
+    @property
+    def n_actions(self) -> int:
+        return int(self.acts.sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class Ledger:
+    """Implementation-neutral token ledger (all exact integers)."""
+
+    fetch_tokens: int
+    signal_tokens: int
+    push_tokens: int
+    n_fetches: int
+    n_hits: int
+    n_reads: int
+    n_writes: int
+    n_invalidation_signals: int
+
+    @property
+    def total_tokens(self) -> int:
+        return self.fetch_tokens + self.signal_tokens + self.push_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffReport:
+    """Agreed-upon results of a conformance run (post-assertion)."""
+
+    workload: str
+    strategy: str
+    trace: Trace
+    ledger: Ledger
+    state: np.ndarray      # (n, m) final MESI states
+    version: np.ndarray    # (m,) final canonical versions
+    last_sync: np.ndarray  # (n, m) version at last fill/commit
+    implementations: tuple
+
+
+# ---------------------------------------------------------------------------
+# Trace sampling - the engine's exact action stream.
+
+
+def episode_key(seed: int, run: int = 0) -> jax.Array:
+    """The engine's per-run key: ``fold_in(PRNGKey(seed), run)``
+    (``engine._grid_keys``), so replays target a specific grid cell."""
+    return jax.random.fold_in(jax.random.PRNGKey(int(seed)), run)
+
+
+def sample_trace(cfg: acs.ACSConfig, key: jax.Array,
+                 rates: acs.RateMatrices | None = None) -> Trace:
+    """Sample the action stream ``run_episode(cfg, key, rates=rates)``
+    executes, via the shared ``acs.draw_actions`` sampler and the same
+    per-step key split."""
+    keys = jax.random.split(key, cfg.n_steps)
+    acts, arts, writes = jax.vmap(
+        lambda k: acs.draw_actions(k, cfg.n_agents, cfg.n_artifacts,
+                                   cfg.volatility, cfg.p_act, rates))(keys)
+    return Trace(acts=np.asarray(acts, bool),
+                 arts=np.asarray(arts, np.int32),
+                 writes=np.asarray(writes, bool))
+
+
+def _actions(trace: Trace):
+    """Serialized (step, agent, artifact, is_write) stream - authority
+    order: steps ascending, agents ascending within a step (the
+    ``fori_loop`` order of ``acs.tick``)."""
+    n_steps, n_agents = trace.acts.shape
+    for s in range(n_steps):
+        for a in range(n_agents):
+            if trace.acts[s, a]:
+                yield s, a, int(trace.arts[s, a]), bool(trace.writes[s, a])
+
+
+# ---------------------------------------------------------------------------
+# Leg 1: message-level protocol.
+
+
+def replay_protocol(cfg: acs.ACSConfig, trace: Trace):
+    """Replay through coordinator / event bus / agent runtimes."""
+    strategy = acs.STRATEGY_NAMES[cfg.strategy]
+    bus = EventBus()
+    store = ArtifactStore()
+    coord = CoordinatorService(bus, store, strategy=strategy)
+    for d in range(cfg.n_artifacts):
+        coord.register_artifact(f"artifact-{d}",
+                                list(range(cfg.artifact_tokens)))
+    agents = [AgentRuntime(f"agent-{a}", coord, bus, strategy=strategy,
+                           access_k=cfg.access_k,
+                           max_stale_steps=cfg.max_stale_steps)
+              for a in range(cfg.n_agents)]
+    for s, a, d, is_write in _actions(trace):
+        if is_write:
+            agents[a].write(f"artifact-{d}", [s] * cfg.artifact_tokens)
+        else:
+            agents[a].read(f"artifact-{d}")
+
+    led = coord.ledger
+    ledger = Ledger(
+        fetch_tokens=led.fetch_tokens, signal_tokens=led.signal_tokens,
+        push_tokens=led.push_tokens, n_fetches=led.n_fetches,
+        n_hits=led.n_hits, n_reads=led.n_reads, n_writes=led.n_writes,
+        n_invalidation_signals=led.n_invalidation_signals)
+    state = np.array([[int(ag.state_of(f"artifact-{d}"))
+                       for d in range(cfg.n_artifacts)] for ag in agents],
+                     np.int32)
+    # the authority directory must mirror the agent-side cache states
+    # (immediate bus delivery); a divergence is a protocol bug.
+    dir_state = np.array(
+        [[int(coord.agent_state(f"agent-{a}", f"artifact-{d}"))
+          for d in range(cfg.n_artifacts)] for a in range(cfg.n_agents)],
+        np.int32)
+    if not np.array_equal(state, dir_state):
+        raise ConformanceError(
+            "protocol authority directory diverged from agent caches:\n"
+            f"agents:\n{state}\ndirectory:\n{dir_state}")
+    version = np.array([coord.directory[f"artifact-{d}"].version
+                        for d in range(cfg.n_artifacts)], np.int32)
+    sync = np.zeros((cfg.n_agents, cfg.n_artifacts), np.int32)
+    for a, ag in enumerate(agents):
+        for d in range(cfg.n_artifacts):
+            entry = ag.cache.get(f"artifact-{d}")
+            if entry is not None:
+                sync[a, d] = entry.version
+    return ledger, state, version, sync
+
+
+# ---------------------------------------------------------------------------
+# Leg 2: vectorized JAX state machine (eager replay of the tick bodies).
+
+
+def replay_vectorized(cfg: acs.ACSConfig, trace: Trace):
+    arrays = acs.init_arrays(cfg)
+    met = acs.init_metrics()
+    for _, a, d, is_write in _actions(trace):
+        arrays = arrays._replace(
+            agent_actions=arrays.agent_actions.at[a].add(1))
+        if is_write:
+            arrays, met = acs._do_write(cfg, arrays, met, a, d)
+        else:
+            arrays, met = acs._do_read(cfg, arrays, met, a, d)
+    ledger = Ledger(
+        fetch_tokens=int(met.fetch_tokens),
+        signal_tokens=int(met.signal_tokens),
+        push_tokens=int(met.push_tokens),
+        n_fetches=int(met.n_fetches), n_hits=int(met.n_hits),
+        n_reads=int(met.n_reads), n_writes=int(met.n_writes),
+        n_invalidation_signals=int(met.n_invalidation_signals))
+    return (ledger, np.asarray(arrays.state, np.int32),
+            np.asarray(arrays.version, np.int32),
+            np.asarray(arrays.last_sync, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Leg 3: Pallas MESI tick kernel (batch of one simulation).
+
+
+def replay_pallas(cfg: acs.ACSConfig, trace: Trace):
+    if cfg.strategy not in DIFFERENTIAL_STRATEGIES:
+        raise ValueError("pallas leg covers the invalidation strategies")
+    n, m = cfg.n_agents, cfg.n_artifacts
+    state = jnp.full((1, n, m), _I, jnp.int32)
+    version = jnp.ones((1, m), jnp.int32)
+    sync = jnp.zeros((1, n, m), jnp.int32)
+    reads = jnp.zeros((1, n, m), jnp.int32)
+    counters = np.zeros(8, np.int64)
+    n_steps = trace.acts.shape[0]
+    for s in range(n_steps):
+        a = jnp.asarray(trace.acts[s][None], jnp.int32)
+        d = jnp.asarray(trace.arts[s][None], jnp.int32)
+        w = jnp.asarray(trace.writes[s][None], jnp.int32)
+        state, version, sync, reads, cnt = mesi_tick_pallas(
+            state, version, sync, reads, a, d, w,
+            artifact_tokens=cfg.artifact_tokens,
+            eager=cfg.strategy == acs.EAGER,
+            access_k=(cfg.access_k
+                      if cfg.strategy == acs.ACCESS_COUNT else 0),
+            signal_tokens=acs.SIGNAL_TOKENS)
+        counters += np.asarray(cnt[0], np.int64)
+    ledger = Ledger(
+        fetch_tokens=int(counters[0]), signal_tokens=int(counters[1]),
+        push_tokens=int(counters[2]), n_fetches=int(counters[3]),
+        n_hits=int(counters[4]),
+        n_reads=int((trace.acts & ~trace.writes).sum()),
+        n_writes=int((trace.acts & trace.writes).sum()),
+        n_invalidation_signals=int(counters[5]))
+    return (ledger, np.asarray(state[0], np.int32),
+            np.asarray(version[0], np.int32),
+            np.asarray(sync[0], np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Leg 4: model-checker transition relation (abstract, per-artifact).
+
+
+#: exploration caps large enough that replay guards never bind.
+_UNCAPPED = 1 << 28
+
+
+def replay_model_check(cfg: acs.ACSConfig, trace: Trace):
+    """Drive ``model_check.successors`` with the trace's micro-actions.
+
+    Each artifact runs an independent instance of the single-artifact
+    spec (artifacts never interact; the sharded-directory argument).
+    An ACS read decomposes into ``[Fetch] Read``; an ACS write into
+    ``[Fetch] [Upgrade] Write`` (Fetch iff Invalid, Upgrade iff Shared
+    - a committed writer is the spec's M owner and writes directly).
+    Every micro-action must be *enabled* in the spec's Next relation at
+    the current state, so the whole trace is a path of the model the
+    paper model-checked.  Invariants are asserted on every visited
+    state.
+    """
+    if cfg.strategy != acs.LAZY:
+        raise ValueError("model-check leg covers LAZY only")
+    n, m = cfg.n_agents, cfg.n_artifacts
+    mc_cfg = mc.CheckConfig(n_agents=n, max_stale_steps=_UNCAPPED,
+                            max_version=_UNCAPPED, max_steps=_UNCAPPED)
+    # ACS cold start: all Invalid at version 1, never synced.
+    states = [(1, (mc.I,) * n, (0,) * n, (0,) * n) for _ in range(m)]
+
+    def apply(d: int, label: str) -> None:
+        succ = dict(mc.successors(mc_cfg, states[d]))
+        if label not in succ:
+            raise ConformanceError(
+                f"micro-action {label} not enabled at model state "
+                f"{states[d]} (artifact {d}); enabled: {sorted(succ)}")
+        states[d] = succ[label]
+        if not mc.inv_single_writer(mc_cfg, states[d]):
+            raise ConformanceError(
+                f"SWMR violated at model state {states[d]}")
+
+    for _, a, d, is_write in _actions(trace):
+        if states[d][1][a] == mc.I:
+            apply(d, f"Fetch({a})")
+        if is_write:
+            if states[d][1][a] == mc.S:
+                apply(d, f"Upgrade({a})")
+            apply(d, f"Write({a})")
+        else:
+            apply(d, f"Read({a})")
+
+    # Abstraction map: the spec's Write leaves the committed writer in
+    # M; the executable protocol downgrades it to S on commit (SS5.3).
+    # E never persists (Upgrade is always immediately followed by
+    # Write in the decomposition above).
+    state = np.empty((n, m), np.int32)
+    version = np.empty(m, np.int32)
+    sync = np.empty((n, m), np.int32)
+    for d in range(m):
+        ver, sts, _steps, syn = states[d]
+        version[d] = ver
+        for a in range(n):
+            if sts[a] == _E:
+                raise ConformanceError(
+                    f"Exclusive state persisted at artifact {d}")
+            state[a, d] = _S if sts[a] in (_S, _M) else _I
+            sync[a, d] = syn[a]
+    return state, version, sync
+
+
+# ---------------------------------------------------------------------------
+# The four-way check.
+
+
+def _expect(label: str, got, want, context: str) -> None:
+    if isinstance(got, np.ndarray) or isinstance(want, np.ndarray):
+        equal = np.array_equal(np.asarray(got), np.asarray(want))
+    else:
+        equal = got == want
+    if not equal:
+        raise ConformanceError(
+            f"{context}: {label} mismatch\n  got:  {got}\n  want: {want}")
+
+
+def differential_check(workload, run: int = 0,
+                       strategies=None) -> DiffReport:
+    """Replay one sampled trace of ``workload`` through every
+    implementation and assert bit-exact agreement.
+
+    ``workload``: a ``repro.sim.workloads.Workload`` (heterogeneous
+    rates) or a ``ScenarioConfig``-like object with ``.acs`` and
+    ``.seed`` (scalar rates).  ``run`` selects the engine grid cell the
+    trace reproduces.  Returns the agreed-upon :class:`DiffReport`;
+    raises :class:`ConformanceError` on any divergence.
+    """
+    cfg = workload.acs
+    if cfg.strategy not in DIFFERENTIAL_STRATEGIES:
+        raise ValueError(
+            f"differential harness covers "
+            f"{[acs.STRATEGY_NAMES[s] for s in DIFFERENTIAL_STRATEGIES]},"
+            f" got {acs.STRATEGY_NAMES[cfg.strategy]}")
+    if cfg.max_stale_steps > 0:
+        raise ValueError("K-staleness revalidation is scan-path only; "
+                         "run the differential check with "
+                         "max_stale_steps=0")
+    rates = workload.rates() if hasattr(workload, "rates") else None
+    key = episode_key(workload.seed, run)
+    trace = sample_trace(cfg, key, rates)
+
+    led_vec, st_vec, ver_vec, sync_vec = replay_vectorized(cfg, trace)
+    led_pro, st_pro, ver_pro, sync_pro = replay_protocol(cfg, trace)
+    led_pal, st_pal, ver_pal, sync_pal = replay_pallas(cfg, trace)
+
+    ctx = f"workload {workload.name!r} run {run}"
+    for field in dataclasses.fields(Ledger):
+        _expect(f"ledger.{field.name} (protocol vs vectorized)",
+                getattr(led_pro, field.name),
+                getattr(led_vec, field.name), ctx)
+        _expect(f"ledger.{field.name} (pallas vs vectorized)",
+                getattr(led_pal, field.name),
+                getattr(led_vec, field.name), ctx)
+    _expect("state (protocol vs vectorized)", st_pro, st_vec, ctx)
+    _expect("state (pallas vs vectorized)", st_pal, st_vec, ctx)
+    _expect("version (protocol vs vectorized)", ver_pro, ver_vec, ctx)
+    _expect("version (pallas vs vectorized)", ver_pal, ver_vec, ctx)
+    _expect("last_sync (pallas vs vectorized)", sync_pal, sync_vec, ctx)
+    # protocol caches only materialize entries on first touch and keep
+    # the committed version on them; compare where an entry is valid.
+    valid = st_vec != _I
+    _expect("last_sync on valid entries (protocol vs vectorized)",
+            sync_pro[valid], sync_vec[valid], ctx)
+
+    implementations = ["protocol", "vectorized", "pallas"]
+    if cfg.strategy == acs.LAZY:
+        st_mc, ver_mc, sync_mc = replay_model_check(cfg, trace)
+        _expect("state (model-check vs vectorized)", st_mc, st_vec, ctx)
+        _expect("version (model-check vs vectorized)", ver_mc, ver_vec,
+                ctx)
+        _expect("last_sync (model-check vs vectorized)", sync_mc,
+                sync_vec, ctx)
+        implementations.append("model_check")
+
+    # Close the loop: the fused tensor path executes this very trace.
+    met = acs.run_episode(cfg, key, rates=rates)
+    _expect("run_episode fetch_tokens vs replay",
+            int(met.fetch_tokens), led_vec.fetch_tokens, ctx)
+    _expect("run_episode signal_tokens vs replay",
+            int(met.signal_tokens), led_vec.signal_tokens, ctx)
+    _expect("run_episode push_tokens vs replay",
+            int(met.push_tokens), led_vec.push_tokens, ctx)
+    _expect("run_episode n_hits vs replay",
+            int(met.n_hits), led_vec.n_hits, ctx)
+    implementations.append("run_episode")
+
+    return DiffReport(
+        workload=workload.name,
+        strategy=acs.STRATEGY_NAMES[cfg.strategy],
+        trace=trace, ledger=led_vec, state=st_vec, version=ver_vec,
+        last_sync=sync_vec, implementations=tuple(implementations))

@@ -5,13 +5,55 @@ benches must see the real single CPU device; only launch/dryrun.py sets
 up the 512-device placeholder topology (and only when run as a script).
 """
 
+import json
 import os
+import pathlib
 
 # Keep CPU compiles light and deterministic for the test suite.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json with the current results "
+             "instead of asserting against them")
+
+
+@pytest.fixture
+def golden(request):
+    """Golden-fixture helper: ``golden(name, payload)`` asserts
+    ``payload`` equals ``tests/golden/<name>.json`` exactly (after a
+    JSON round-trip, so committed files are the single source of
+    truth).  With ``--update-golden`` it rewrites the file instead -
+    savings numbers can change only through a reviewed diff."""
+    update = request.config.getoption("--update-golden")
+
+    def check(name: str, payload: dict) -> None:
+        path = GOLDEN_DIR / f"{name}.json"
+        rendered = json.dumps(payload, indent=2, sort_keys=True,
+                              default=float)
+        if update:
+            GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+            path.write_text(rendered + "\n")
+            return
+        if not path.exists():
+            pytest.fail(
+                f"golden file {path} missing - generate it with "
+                f"pytest --update-golden and commit the result")
+        stored = json.loads(path.read_text())
+        current = json.loads(rendered)
+        assert current == stored, (
+            f"golden mismatch for {name!r}: results drifted from "
+            f"{path}.  If the change is intentional, regenerate with "
+            f"pytest --update-golden and include the diff in review.")
+
+    return check
 
 
 @pytest.fixture(scope="session")

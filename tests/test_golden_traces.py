@@ -1,0 +1,76 @@
+"""Golden-trace regression fixtures: per-scenario and per-workload
+ledger totals pinned as JSON under ``tests/golden/``.
+
+The simulator is deterministic (threefry PRNG, integer token
+counters), so these compare **exactly**.  Any change to savings
+numbers - a protocol tweak, a sampling reorder, an accounting fix -
+must show up as a reviewed diff of the golden files, regenerated with::
+
+    PYTHONPATH=src python -m pytest tests/test_golden_traces.py \
+        --update-golden
+
+Never silently drifting savings is the point: the paper's headline
+claim (SS8.2) is a number.
+"""
+
+import pytest
+
+from repro.core import acs
+from repro.sim import SCENARIOS, compare_grid, engine, workloads
+
+pytestmark = pytest.mark.slow
+
+#: fixed golden grid for the workload zoo (small enough for CI, big
+#: enough that every family's structure shows up in the totals).
+ZOO_PARAMS = dict(n_agents=6, n_artifacts=4, n_runs=5,
+                  artifact_tokens=1024, n_steps=30)
+
+
+def _per_run(stats_result):
+    return [int(x) for x in stats_result.per_run_total_tokens]
+
+
+def test_scenario_ledgers_match_golden(golden):
+    """Scenarios A-D (SS8.1): per-run broadcast/coherent token totals
+    and the derived savings, bit-for-bit."""
+    cmps = compare_grid(list(SCENARIOS.values()))
+    payload = {}
+    for key, cmp_ in zip(SCENARIOS, cmps):
+        payload[key] = {
+            "scenario": cmp_.scenario,
+            "volatility": cmp_.volatility,
+            "broadcast_total_mean": cmp_.broadcast.total_tokens_mean,
+            "coherent_total_mean": cmp_.coherent.total_tokens_mean,
+            "savings_mean": cmp_.savings_mean,
+            "savings_std": cmp_.savings_std,
+            "crr": cmp_.crr,
+            "cache_hit_rate_mean": cmp_.chr_mean,
+        }
+    golden("scenarios", payload)
+
+
+def test_workload_zoo_ledgers_match_golden(golden):
+    """Every heterogeneous family: per-run totals for both variants,
+    so a drift in either the baseline or the coherent path is caught
+    (not just their ratio)."""
+    zoo = workloads.zoo(**ZOO_PARAMS)
+    payload = {"_grid": dict(ZOO_PARAMS)}
+    for w in zoo:
+        bc = engine.run_workload(w.with_strategy(acs.BROADCAST),
+                                 tick_backend="scan")
+        co = engine.run_workload(w, tick_backend="scan")
+        # same savings definition as engine._comparison_of: per-run
+        # coherent totals against the broadcast mean.
+        savings = 1.0 - (co.per_run_total_tokens
+                         / bc.stats.total_tokens_mean)
+        payload[w.family] = {
+            "name": w.name,
+            "effective_volatility": w.effective_volatility(),
+            "broadcast_per_run": _per_run(bc),
+            "coherent_per_run": _per_run(co),
+            "broadcast_total_mean": bc.stats.total_tokens_mean,
+            "coherent_total_mean": co.stats.total_tokens_mean,
+            "savings_mean": float(savings.mean()),
+            "cache_hit_rate_mean": co.stats.cache_hit_rate_mean,
+        }
+    golden("workloads", payload)

@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) over the system's core invariants:
 the ACS state machine preserves SWMR / monotonic versioning / validity
-coherence on arbitrary seeded episodes and configurations."""
+coherence / bounded staleness on arbitrary seeded episodes and
+configurations - including fully random heterogeneous rate matrices
+(``repro.sim.workloads.random_workload``)."""
 
 import dataclasses
 
@@ -14,24 +16,30 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import acs, invariants
 from repro.core.theorem import savings_lower_bound_uniform
+from repro.sim import workloads
 
 
 #: jitted episode per distinct config (frozen dataclass -> hashable);
 #: one compile per config instead of thousands of eager op compiles.
+#: ``rates`` (heterogeneous rate matrices) is a *traced* argument of
+#: the cached program, so arbitrarily many random workloads also share
+#: one compilation per (shape, strategy).
 _EPISODE_CACHE: dict = {}
 
 
-def run_arrays(cfg: acs.ACSConfig, seed: int):
+def run_arrays(cfg: acs.ACSConfig, seed: int,
+               rates: acs.RateMatrices | None = None):
     fn = _EPISODE_CACHE.get(cfg)
     if fn is None:
-        def episode(key):
+        def episode(key, rates):
             arrays = acs.init_arrays(cfg)
             met = acs.init_metrics()
 
             def body(carry, inp):
                 arrays, met = carry
                 step, k = inp
-                arrays, met = acs.tick(cfg, arrays, met, k, step)
+                arrays, met = acs.tick(cfg, arrays, met, k, step,
+                                       rates=rates)
                 return (arrays, met), (arrays.state, arrays.version)
 
             keys = jax.random.split(key, cfg.n_steps)
@@ -42,7 +50,7 @@ def run_arrays(cfg: acs.ACSConfig, seed: int):
 
         fn = jax.jit(episode)
         _EPISODE_CACHE[cfg] = fn
-    arrays, met, (states, versions) = fn(jax.random.PRNGKey(seed))
+    arrays, met, (states, versions) = fn(jax.random.PRNGKey(seed), rates)
     snapshots = list(zip(np.asarray(states), np.asarray(versions)))
     return arrays, met, snapshots
 
@@ -90,6 +98,74 @@ def test_savings_exceed_theorem_bound_property(n, v, seed):
     # the analytic bound is per-artifact-W; the stochastic draw can
     # exceed V*S slightly, so allow the bound a small epsilon
     assert savings > lb - 0.12
+
+
+@given(n=st.sampled_from([2, 4]), m=st.sampled_from([1, 3]),
+       wl_seed=st.integers(0, 2**10), seed=st.integers(0, 2**16),
+       strategy=st.sampled_from([acs.LAZY, acs.EAGER, acs.ACCESS_COUNT,
+                                 acs.TTL]))
+@settings(max_examples=12, deadline=None)
+def test_random_rate_matrices_preserve_invariants(n, m, wl_seed, seed,
+                                                  strategy):
+    """SWMR + monotonic versioning + validity coherence hold for every
+    randomly generated heterogeneous workload, every strategy."""
+    w = workloads.random_workload(wl_seed, n_agents=n, n_artifacts=m,
+                                  artifact_tokens=32, n_steps=8,
+                                  strategy=strategy)
+    arrays, met, snaps = run_arrays(w.acs, seed, rates=w.rates())
+    prev_version = np.ones(m, np.int32)
+    for state, version in snaps:
+        assert invariants.single_writer(state)
+        assert invariants.monotonic_version(prev_version, version)
+        prev_version = version
+    if strategy in (acs.LAZY, acs.EAGER, acs.ACCESS_COUNT):
+        state, version = snaps[-1]
+        sync = np.asarray(arrays.last_sync)
+        valid = state > 0
+        assert (sync[valid] == np.broadcast_to(
+            version, sync.shape)[valid]).all()
+
+
+@given(wl_seed=st.integers(0, 2**10), seed=st.integers(0, 2**16),
+       k=st.sampled_from([1, 3]))
+@settings(max_examples=10, deadline=None)
+def test_bounded_staleness_holds_on_random_workloads(wl_seed, seed, k):
+    """Invariant 3: with K-staleness enforcement on, no served cache
+    hit carries staleness beyond K - on arbitrary rate matrices."""
+    w = workloads.random_workload(wl_seed, n_agents=3, n_artifacts=2,
+                                  artifact_tokens=32, n_steps=12,
+                                  strategy=acs.LAZY, max_stale_steps=k)
+    _, met, _ = run_arrays(w.acs, seed, rates=w.rates())
+    assert int(met.max_consumed_staleness) <= k
+
+
+def test_consumed_staleness_metric_is_not_vacuous():
+    """Without enforcement a read-only workload drifts well past K=2;
+    with enforcement the same workload is capped - so the bound above
+    is doing real work."""
+    cfg = acs.ACSConfig(n_agents=2, n_artifacts=1, artifact_tokens=16,
+                        n_steps=20, p_act=1.0, volatility=0.0,
+                        strategy=acs.LAZY)
+    _, met0, _ = run_arrays(cfg, 0)
+    assert int(met0.max_consumed_staleness) > 2
+    _, met_k, _ = run_arrays(
+        dataclasses.replace(cfg, max_stale_steps=2), 0)
+    assert int(met_k.max_consumed_staleness) <= 2
+    # the revalidation round-trips are priced (12 tokens each)
+    assert int(met_k.signal_tokens) > int(met0.signal_tokens)
+
+
+def test_zoo_families_preserve_invariants():
+    """Every structured workload family preserves the invariants on a
+    fixed seed (deterministic companion to the hypothesis sweeps)."""
+    for w in workloads.zoo(n_agents=4, n_artifacts=3, n_runs=1,
+                           artifact_tokens=32, n_steps=8):
+        arrays, met, snaps = run_arrays(w.acs, w.seed, rates=w.rates())
+        prev = np.ones(3, np.int32)
+        for state, version in snaps:
+            assert invariants.single_writer(state), w.name
+            assert invariants.monotonic_version(prev, version), w.name
+            prev = version
 
 
 @given(seed=st.integers(0, 2**16))

@@ -105,48 +105,64 @@ class TestBitForBitEquivalence:
 
 
 class TestOneCompilation:
+    """All compile-count assertions go through ``engine.trace_counter``:
+    the process-global counter leaks across test modules, so a bare
+    ``reset_trace_count()`` here would make every other module's
+    accounting (and ours) import-order dependent."""
+
     def test_sweep_compiles_one_program(self):
         """A 4-point V sweep (broadcast + coherent, vmapped runs) is ONE
         trace; the seed path paid >= 8."""
         base = small(seed=13579)
-        engine.clear_compile_cache()
-        engine.reset_trace_count()
-        sweep_volatility(base, (0.05, 0.10, 0.25, 0.50), n_runs=4)
-        assert engine.trace_count() == 1
+        with engine.trace_counter() as tc:
+            sweep_volatility(base, (0.05, 0.10, 0.25, 0.50), n_runs=4)
+            assert tc.count == 1
 
     def test_resweep_same_shape_does_not_retrace(self):
         base = small(seed=24680)
-        engine.clear_compile_cache()
-        engine.reset_trace_count()
-        sweep_volatility(base, (0.05, 0.10, 0.25, 0.50), n_runs=4)
-        n0 = engine.trace_count()
-        sweep_volatility(base, (0.01, 0.33, 0.66, 0.99), n_runs=4)
-        sweep_volatility(base, (0.2, 0.4, 0.6, 0.8), n_runs=4)
-        assert engine.trace_count() == n0 == 1
+        with engine.trace_counter() as tc:
+            sweep_volatility(base, (0.05, 0.10, 0.25, 0.50), n_runs=4)
+            n0 = tc.count
+            sweep_volatility(base, (0.01, 0.33, 0.66, 0.99), n_runs=4)
+            sweep_volatility(base, (0.2, 0.4, 0.6, 0.8), n_runs=4)
+            assert tc.count == n0 == 1
 
     def test_repeated_compare_hits_cache(self):
         scn = small(seed=112233)
-        engine.clear_compile_cache()
-        engine.reset_trace_count()
-        compare(scn)
-        n0 = engine.trace_count()
-        # different volatility/seed, same statics -> zero new traces
-        compare(dataclasses.replace(
-            scn, seed=445566,
-            acs=dataclasses.replace(scn.acs, volatility=0.9)))
-        assert engine.trace_count() == n0
+        with engine.trace_counter() as tc:
+            compare(scn)
+            n0 = tc.count
+            # different volatility/seed, same statics -> zero new traces
+            compare(dataclasses.replace(
+                scn, seed=445566,
+                acs=dataclasses.replace(scn.acs, volatility=0.9)))
+            assert tc.count == n0
 
     def test_compare_grid_groups_by_static_shape(self):
         """Heterogeneous scenario lists compile once per static group."""
         a = small(seed=1, n_steps=6)
         b = small(seed=2, v=0.9, n_steps=6)
         c = small(seed=3, n_steps=8)  # different scan length
-        engine.clear_compile_cache()
-        engine.reset_trace_count()
-        compare_grid([a, b, c])
-        assert engine.trace_count() == 2
+        with engine.trace_counter() as tc:
+            compare_grid([a, b, c])
+            assert tc.count == 2
+
+    def test_trace_counter_is_isolated(self):
+        """Nested scopes see only their own compilations, and the
+        legacy global counter still advances for old callers."""
+        base = small(seed=86420)
+        before = engine.trace_count()
+        with engine.trace_counter() as outer:
+            sweep_volatility(base, (0.1, 0.9), n_runs=4)
+            with engine.trace_counter(clear_cache=False) as inner:
+                # warm cache, same shape: nothing compiles in here
+                sweep_volatility(base, (0.3, 0.7), n_runs=4)
+                assert inner.count == 0
+            assert outer.count == 1
+        assert engine.trace_count() == before + 1
 
 
+@pytest.mark.pallas
 class TestPallasTickBackend:
     @pytest.mark.parametrize("code", [acs.LAZY, acs.EAGER,
                                       acs.ACCESS_COUNT])

@@ -1,0 +1,158 @@
+"""Workload generator + heterogeneous fused-engine tests.
+
+Covers: family generators produce valid rate matrices; the whole zoo
+fuses into ONE compiled program with the rate matrices as traced axes
+(re-running with different families/rates retraces nothing); and the
+Pallas tick route agrees with the scan route bit-for-bit on
+heterogeneous rates.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import acs
+from repro.sim import engine, workloads
+
+SMALL = dict(n_agents=5, n_artifacts=3, n_runs=3,
+             artifact_tokens=64, n_steps=8)
+
+
+def small_zoo(**kw):
+    params = dict(SMALL)
+    params.update(kw)
+    return workloads.zoo(**params)
+
+
+class TestGenerators:
+    @pytest.mark.parametrize("family", sorted(workloads.FAMILIES))
+    def test_family_produces_valid_rates(self, family):
+        w = workloads.make(family, **SMALL)
+        n, m = w.acs.n_agents, w.acs.n_artifacts
+        assert w.p_act.shape == (n,)
+        assert w.pick.shape == (n, m)
+        assert w.write_rate.shape == (n, m)
+        assert np.allclose(w.pick.sum(axis=1), 1.0)
+        assert ((w.p_act >= 0) & (w.p_act <= 1)).all()
+        assert ((w.write_rate >= 0) & (w.write_rate <= 1)).all()
+        assert 0.0 <= w.effective_volatility() <= 1.0
+        assert w.family == family
+
+    def test_unknown_family_raises(self):
+        with pytest.raises(KeyError, match="unknown workload family"):
+            workloads.make("nope")
+
+    def test_invalid_rates_rejected(self):
+        w = workloads.make("zipf", **SMALL)
+        with pytest.raises(ValueError, match="sum to 1"):
+            dataclasses.replace(w, pick=w.pick * 0.5)
+        with pytest.raises(ValueError, match="outside"):
+            dataclasses.replace(w, write_rate=w.write_rate + 2.0)
+        with pytest.raises(ValueError, match="do not match"):
+            dataclasses.replace(w, p_act=np.r_[w.p_act, 0.5])
+
+    def test_random_workload_is_valid(self):
+        for seed in (0, 1, 2):
+            w = workloads.random_workload(seed, n_agents=3, n_artifacts=2)
+            assert np.allclose(w.pick.sum(axis=1), 1.0)
+
+    def test_zoo_shares_one_static_signature(self):
+        ws = small_zoo()
+        keys = {engine._static_key(w.acs) for w in ws}
+        assert len(keys) == 1
+        assert len(ws) == len(workloads.FAMILIES)
+
+    def test_structure_is_actually_heterogeneous(self):
+        """ping-pong concentrates writes; rag is read-heavy - the
+        families must span a wide effective-volatility range or the zoo
+        tests nothing the scalar sweep didn't."""
+        effs = {w.family: w.effective_volatility() for w in small_zoo()}
+        assert effs["rag"] < 0.05
+        assert effs["ping_pong"] > 0.5
+        assert effs["ping_pong"] > 5 * effs["rag"]
+
+    def test_effective_volatility_of_uniform_matches_scalar(self):
+        cfg = acs.ACSConfig(n_agents=4, n_artifacts=3,
+                            artifact_tokens=64, n_steps=8,
+                            volatility=0.37)
+        r = acs.uniform_rates(cfg)
+        w = workloads.Workload(
+            name="u", family="uniform", acs=cfg,
+            p_act=np.asarray(r.p_act),
+            pick=np.asarray(np.exp(r.log_pick)),
+            write_rate=np.asarray(r.write_rate), seed=0)
+        assert w.effective_volatility() == pytest.approx(0.37)
+
+
+class TestFusedHeterogeneousGrid:
+    def test_zoo_compiles_one_program(self):
+        """The acceptance criterion: an entire heterogeneous zoo
+        (variant x workload x run) is ONE compilation."""
+        with engine.trace_counter() as tc:
+            cmps = engine.compare_workloads(small_zoo())
+            assert tc.count == 1
+        assert len(cmps) == len(workloads.FAMILIES)
+        for c in cmps:
+            assert c.broadcast.total_tokens_mean > 0
+            assert c.coherent.total_tokens_mean > 0
+
+    def test_rerun_with_new_rates_does_not_retrace(self):
+        """Rate matrices are traced: same static shape + workload
+        count, arbitrarily different families/skews -> zero retraces."""
+        with engine.trace_counter() as tc:
+            engine.compare_workloads(small_zoo())
+            n0 = tc.count
+            perturbed = small_zoo(families=("zipf",) * len(
+                workloads.FAMILIES))
+            engine.compare_workloads(perturbed)
+            assert tc.count == n0 == 1
+
+    def test_mixed_static_groups_compile_once_each(self):
+        ws = small_zoo(families=("bursty", "zipf"))
+        other = workloads.make("pipeline", **{**SMALL, "n_steps": 12})
+        with engine.trace_counter() as tc:
+            engine.compare_workloads(ws + [other])
+            assert tc.count == 2
+
+    def test_coherent_beats_broadcast_except_adversarial(self):
+        """Structured workloads keep the paper's savings claim alive;
+        the adversarial ping-pong intentionally erodes (but here, with
+        spectators reading, does not fully destroy) it."""
+        cmps = {c.scenario: c for c in engine.compare_workloads(
+            small_zoo(n_steps=12))}
+        for name, c in cmps.items():
+            assert c.coherent.total_tokens_mean <= \
+                c.broadcast.total_tokens_mean, name
+        assert cmps["rag read-heavy"].savings_mean > \
+            cmps["write ping-pong"].savings_mean
+
+    def test_run_workload_matches_compare_cell(self):
+        w = small_zoo()[0]
+        single = engine.run_workload(w)
+        cell = engine.compare_workloads([w])[0]
+        assert single.stats.total_tokens_mean == \
+            cell.coherent.total_tokens_mean
+
+
+@pytest.mark.pallas
+class TestHeterogeneousPallasRoute:
+    @pytest.mark.parametrize("code", [acs.LAZY, acs.EAGER,
+                                      acs.ACCESS_COUNT])
+    def test_pallas_matches_scan_on_heterogeneous_rates(self, code):
+        w = workloads.make("hierarchical", **SMALL).with_strategy(code)
+        a = engine.run_workload(w, tick_backend="scan")
+        b = engine.run_workload(w, tick_backend="pallas")
+        np.testing.assert_array_equal(a.per_run_total_tokens,
+                                      b.per_run_total_tokens)
+        np.testing.assert_array_equal(a.per_run_chr, b.per_run_chr)
+        for f in ("fetch_tokens_mean", "signal_tokens_mean",
+                  "push_tokens_mean", "n_fetches_mean",
+                  "n_reads_mean", "n_writes_mean"):
+            assert getattr(a.stats, f) == getattr(b.stats, f), f
+
+    def test_pallas_staleness_sentinel_on_het_route(self):
+        w = workloads.make("zipf", **SMALL)
+        b = engine.run_workload(w, tick_backend="pallas")
+        assert b.stats.max_staleness_max == -1
+        assert b.stats.max_consumed_staleness_max == -1
