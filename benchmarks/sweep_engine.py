@@ -114,9 +114,12 @@ def run() -> list[BenchRow]:
     fused["compile_s"] = max(0.0, fused["cold_s"] - fused["steady_s"])
     speedup = seed_loop["sims_per_s"] and (
         fused["sims_per_s"] / seed_loop["sims_per_s"])
+    # The mesh slice the fused grid actually ran on (schema v2): device
+    # count plus the sharded axis (null = single-device program).
+    plan = engine.shard_plan(len(_vols()), base.n_runs)
 
     payload = {
-        "schema_version": 1,
+        "schema_version": 2,
         "fast_mode": fast_mode(),
         "grid": {
             "volatilities": list(_vols()),
@@ -129,6 +132,8 @@ def run() -> list[BenchRow]:
         },
         "backend": jax.default_backend(),
         "tick_backend": resolve_tick_backend(base.acs, n_episodes),
+        "devices": plan.devices,
+        "shard_axis": plan.axis,
         "seed_loop": seed_loop,
         "fused": fused,
         "speedup_steady": speedup,
@@ -153,7 +158,8 @@ def run() -> list[BenchRow]:
           + f"\nSteady-state speedup: {speedup:.1f}x "
           f"(grid: {len(_vols())} volatilities x 2 strategies x "
           f"{base.n_runs} runs; backend {payload['backend']}, tick "
-          f"{payload['tick_backend']}).\n")
+          f"{payload['tick_backend']}, devices {plan.devices}"
+          f"{f' sharding {plan.axis}' if plan.axis else ''}).\n")
     rows = [
         BenchRow(name="sweep/seed_loop",
                  us_per_call=seed_loop["steady_s"] * 1e6 / seed_eps,

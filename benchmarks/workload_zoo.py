@@ -83,8 +83,12 @@ def run() -> list[BenchRow]:
             "cache_hit_rate_mean": cmp_.chr_mean,
         })
 
+    # The mesh slice the fused zoo ran on (schema v2): device count
+    # plus the sharded axis (null = single-device program).
+    plan = engine.shard_plan(len(zoo), zoo[0].n_runs)
+
     payload = {
-        "schema_version": 1,
+        "schema_version": 2,
         "fast_mode": fast_mode(),
         "grid": {
             "families": [w.family for w in zoo],
@@ -98,6 +102,8 @@ def run() -> list[BenchRow]:
         },
         "backend": jax.default_backend(),
         "tick_backend": tick_backend,
+        "devices": plan.devices,
+        "shard_axis": plan.axis,
         "compilations": compilations,
         "recompilations_steady": recompiles,
         "cold_s": cold_s,
@@ -123,7 +129,9 @@ def run() -> list[BenchRow]:
           + f"\nOne fused program: {compilations} compilation(s) for "
           f"{len(zoo)} families x 2 variants x {zoo[0].n_runs} runs "
           f"({payload['sims_per_s']:.1f} sims/s steady; backend "
-          f"{payload['backend']}, tick {payload['tick_backend']}).\n")
+          f"{payload['backend']}, tick {payload['tick_backend']}, "
+          f"devices {plan.devices}"
+          f"{f' sharding {plan.axis}' if plan.axis else ''}).\n")
 
     rows = [BenchRow(
         name=f"zoo/{f['family']}",

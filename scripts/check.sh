@@ -1,21 +1,39 @@
 #!/usr/bin/env bash
-# Repo health check: tier-1 tests + fast-mode smoke benches.
+# Repo health check: hygiene + tier-1 tests + fast-mode smoke benches.
 #
 # Usage: scripts/check.sh
+#   - fails if cache dirs (__pycache__ / .pytest_cache / .hypothesis)
+#     ever become git-tracked
 #   - runs the full pytest suite (tier-1 verify from ROADMAP.md)
 #   - runs the sweep-engine + table benches in REPRO_BENCH_FAST mode
 #     (shrunk n_runs/n_steps; completes in well under a minute)
+#   - replays the committed BENCH baselines through the perf gate
+#     (plumbing check; CI's bench-gate job does the fresh-run gating)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== repo hygiene =="
+tracked_caches=$(git ls-files | grep -E '(^|/)(__pycache__|\.pytest_cache|\.hypothesis|\.mypy_cache|\.ruff_cache|[^/]*\.egg-info)(/|$)' || true)
+if [ -n "$tracked_caches" ]; then
+  echo "ERROR: cache artifacts are git-tracked (extend .gitignore and \`git rm -r --cached\` them):"
+  echo "$tracked_caches"
+  exit 1
+fi
+echo "no tracked cache artifacts"
+
+echo
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
 echo
 echo "== smoke benches (REPRO_BENCH_FAST=1) =="
 REPRO_BENCH_FAST=1 python -m benchmarks.run sweep table1 table2 cliff zoo
+
+echo
+echo "== bench gate (baseline replay) =="
+python scripts/bench_gate.py --replay-baseline
 
 echo
 echo "check.sh: OK"

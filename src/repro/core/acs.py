@@ -104,6 +104,21 @@ def uniform_rates(cfg: ACSConfig) -> RateMatrices:
     )
 
 
+def run_keys(base_key: jax.Array, run_ids: jax.Array) -> jax.Array:
+    """Per-run episode keys: ``fold_in(base_key, run_ids[i])``.
+
+    The single source of truth for the sweep engine's per-run key
+    schedule.  ``run_ids`` carries **global** run indices, so a
+    device-sharded grid (``repro.sim.engine`` under ``shard_map``)
+    derives exactly the keys the single-device path derives for the
+    same cells - device-local position never enters the schedule, and
+    ledgers stay bit-identical across any device count.  The
+    differential oracle (``repro.sim.oracle.episode_key``) replays
+    single cells of this same schedule.
+    """
+    return jax.vmap(lambda r: jax.random.fold_in(base_key, r))(run_ids)
+
+
 def draw_actions(key: jax.Array, n_agents: int, n_artifacts: int,
                  volatility, p_act, rates: RateMatrices | None = None):
     """Sample one step's (acts, arts, writes) for every agent.

@@ -34,6 +34,23 @@ _I, _S = int(MESIState.I), int(MESIState.S)
 N_COUNTERS = 8
 
 
+def episode_step_keys(keys: jax.Array, n_steps: int) -> jax.Array:
+    """Per-step PRNG keys for a batch of kernel-routed episodes.
+
+    ``keys`` is a ``(B, 2)`` batch of per-episode keys - in the sweep
+    engine these come from ``repro.core.acs.run_keys`` (``fold_in`` on
+    the **global** run index), so under ``shard_map`` each device
+    derives the same schedule the single-device path derives for its
+    slice of episodes.  Returns ``(n_steps, B, 2)``: step-major, the
+    scan order of the batched episode loop, and step ``s`` holds
+    exactly ``split(key, n_steps)[s]`` - the schedule
+    ``acs.run_episode`` uses - so kernel-routed episodes consume the
+    same action stream as the ``lax.scan`` path bit-for-bit.
+    """
+    step_keys = jax.vmap(lambda k: jax.random.split(k, n_steps))(keys)
+    return jnp.swapaxes(step_keys, 0, 1)
+
+
 def _mesi_kernel(state_ref, version_ref, sync_ref, reads_ref,
                  act_ref, art_ref, write_ref,
                  state_out, version_out, sync_out, reads_out, counter_out,

@@ -3,9 +3,21 @@
 A FUNCTION, not a module-level constant, so importing this module never
 touches jax device state (the dry-run must set
 ``--xla_force_host_platform_device_count`` before any jax init).
+
+CPU hook: to exercise the device-sharded sweep path
+(``repro.sim.engine``) without accelerators, force a multi-device host
+topology *before* the first jax import::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_sharded_sweep.py -q
+
+CI's ``sharded`` job does exactly this, so every PR runs the
+``shard_map`` grid runners on 8 (virtual) devices.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
@@ -23,3 +35,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1-device mesh for CPU tests (same axis names)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_sweep_mesh(n_devices: Optional[int] = None,
+                    axis_name: str = "runs"):
+    """1-D mesh for the device-sharded fleet sweep engine.
+
+    The sweep grids of ``repro.sim.engine`` are embarrassingly parallel
+    along their batch axes, so the engine shards them over a single
+    mesh axis - ``"runs"`` normally, ``"workloads"`` when the run axis
+    does not divide (see ``engine.shard_plan``).  ``n_devices`` defaults
+    to every local device; pass fewer to sweep on a sub-mesh.
+    """
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return jax.make_mesh((n,), (axis_name,))

@@ -2,7 +2,11 @@
 
 Fleet-scale sweep architecture: an entire ``(variant x volatility x
 run)`` evaluation grid compiles **once** and runs as **one** batched XLA
-program.  Three mechanisms make that possible:
+program - and on a multi-device host that single program is
+**device-sharded** with ``jax.shard_map`` over a 1-D mesh
+(``repro.launch.mesh.make_sweep_mesh``), so an 8-device host executes 8
+grid slices of the same compiled program in parallel.  Four mechanisms
+make that possible:
 
   1. **Traced sweep axes.**  ``volatility`` and ``p_act`` (and the PRNG
      key, as always) are traced scalars of the episode runner
@@ -21,12 +25,27 @@ program.  Three mechanisms make that possible:
   3. **Fused baseline.**  ``compare`` / ``sweep_volatility`` stack the
      broadcast baseline and the coherent variant along a leading variant
      axis *inside* the same jitted program - one launch, not two.
+  4. **Device sharding with a global key schedule.**  When more than
+     one local device is attached (``resolve_sweep_devices``; force
+     with ``REPRO_SWEEP_DEVICES=n`` or the ``devices=`` argument), the
+     grid program is wrapped in ``shard_map`` over a 1-D mesh: the
+     ``runs`` axis is sharded (falling back to the ``workloads`` /
+     scenario-cell axis, else padding runs - ``shard_plan``).  Episode
+     keys are derived *inside* the program by ``acs.run_keys`` -
+     ``fold_in`` on the **global** run index carried by a sharded
+     ``run_ids`` operand, never on device-local position - so sharded
+     ledgers are bit-identical to the single-device path and replayable
+     through the ``repro.sim.oracle`` conformance harness.  The key
+     operands are donated to the program (freshly built every call, so
+     XLA may reuse their buffers for episode state).
 
 Per-tick MESI transitions route through the Pallas kernel
 (``repro.kernels.mesi_transition``) when a real TPU backend is attached
 and the flattened batch is large enough to fill it; otherwise the
 vectorized ``lax.scan`` path (vmapped ``acs.run_episode``) is used.
-Force either with ``REPRO_SIM_TICK=pallas|scan``.
+Force either with ``REPRO_SIM_TICK=pallas|scan``.  Under ``shard_map``
+the kernel is invoked per device on that device's slice of the episode
+batch.
 
 Population statistics (mean, population std) are reported exactly as the
 paper does (10 runs, sigma over the population).
@@ -37,16 +56,41 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import os
-from typing import Optional, Sequence
+import warnings
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
+
+try:  # newer jax exposes shard_map at the top level
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # jax <= 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+
+def _make_shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map with the replication check disabled, across jax's API
+    drift (``check_rep`` -> ``check_vma`` -> possibly neither).  The
+    check must be off where supported: the grid body is collective-free
+    (episodes are independent) and older jax has no replication rule
+    for ``pallas_call``, so the per-device MESI-tick kernel route would
+    be rejected under a checked shard_map."""
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return _shard_map_impl(fn, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    raise TypeError("no compatible shard_map signature found")
 
 from repro.core import acs
 from repro.core.states import MESIState
 from repro.kernels.backend import interpret_default
-from repro.kernels.mesi_transition import N_COUNTERS, mesi_tick_pallas
+from repro.kernels.mesi_transition import (N_COUNTERS, episode_step_keys,
+                                           mesi_tick_pallas)
+from repro.launch.mesh import make_sweep_mesh
 from repro.sim.scenarios import ScenarioConfig
 
 # ---------------------------------------------------------------------------
@@ -148,6 +192,113 @@ def resolve_tick_backend(cfg: acs.ACSConfig, batch: int) -> str:
             and batch >= PALLAS_MIN_BATCH):
         return "pallas"
     return "scan"
+
+
+# ---------------------------------------------------------------------------
+# Device sharding.  Sweep grids are embarrassingly parallel along their
+# batch axes; ``shard_plan`` picks which axis a given grid shards over.
+
+
+def resolve_sweep_devices() -> int:
+    """Device count the sweep engine shards over (1 = unsharded).
+
+    ``REPRO_SWEEP_DEVICES=n`` forces a count (capped at the local
+    device count; ``1`` disables sharding); default is every local
+    device.  On a single-device host this is 1 and the engine takes the
+    plain-jit path - byte-for-byte the pre-sharding behavior.
+    """
+    forced = os.environ.get("REPRO_SWEEP_DEVICES", "auto")
+    n_local = jax.local_device_count()
+    if forced != "auto":
+        try:
+            n = int(forced)
+        except ValueError:
+            raise ValueError(
+                f"REPRO_SWEEP_DEVICES must be an integer or 'auto', "
+                f"got {forced!r}") from None
+        return max(1, min(n, n_local))
+    return n_local
+
+
+class ShardPlan(NamedTuple):
+    """How one grid call maps onto the device mesh.
+
+    ``axis`` is ``None`` (unsharded single-device program), ``"runs"``
+    (run axis sharded) or ``"workloads"`` (scenario/workload cell axis
+    sharded).  ``pad_runs`` is the padded run-axis length the program
+    sees; padding runs is the always-available fallback because run
+    keys are derived from **global** run indices, so extra trailing
+    runs are real (discarded) episodes, not perturbed ones.
+    """
+
+    devices: int
+    axis: Optional[str]
+    pad_runs: int
+
+
+def shard_plan(n_cells: int, n_runs: int,
+               devices: Optional[int] = None) -> ShardPlan:
+    """Pick the mesh axis for an ``(n_cells x n_runs)`` grid.
+
+    Preference order: shard ``runs`` when it divides the device count,
+    else shard the cell (``workloads``) axis when that divides, else
+    pad ``runs`` up to the next multiple and shard it (the padded tail
+    is sliced off on the host).  ``devices=None`` resolves via
+    ``resolve_sweep_devices``.
+    """
+    if devices is None:
+        devices = resolve_sweep_devices()
+    devices = max(1, min(devices, jax.local_device_count()))
+    if devices <= 1:
+        return ShardPlan(1, None, n_runs)
+    if n_runs % devices == 0:
+        return ShardPlan(devices, "runs", n_runs)
+    if n_cells % devices == 0:
+        return ShardPlan(devices, "workloads", n_runs)
+    pad = -n_runs % devices
+    return ShardPlan(devices, "runs", n_runs + pad)
+
+
+def _shard_wrap(run_grid, plan: ShardPlan, n_cell_operands: int,
+                n_key_operands: int = 2):
+    """Wrap a grid program per the plan and jit it.
+
+    Operand convention: ``n_cell_operands`` leading operands carry the
+    cell axis (volatilities / rate matrices / base keys), then
+    ``run_ids`` last.  Outputs are ``(variant, cell, run)`` stacks.
+    The trailing ``n_key_operands`` operands (base keys + run ids) are
+    donated - they are rebuilt host-side on every call.
+    """
+    n_args = n_cell_operands + 1
+    donate = tuple(range(n_args - n_key_operands, n_args))
+    if plan.axis is None:
+        return jax.jit(run_grid, donate_argnums=donate)
+    mesh = make_sweep_mesh(plan.devices, plan.axis)
+    if plan.axis == "runs":
+        in_specs = (P(),) * n_cell_operands + (P("runs"),)
+        out_specs = P(None, None, "runs")
+    else:
+        in_specs = (P("workloads"),) * n_cell_operands + (P(),)
+        out_specs = P(None, "workloads", None)
+    return jax.jit(
+        _make_shard_map(run_grid, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs),
+        donate_argnums=donate)
+
+
+def _call_grid(fn, *args) -> dict:
+    """Execute a compiled grid program and gather to host.
+
+    The donated key operands rarely alias an output buffer on CPU
+    (dtype/shape mismatch), and XLA warns about every unusable
+    donation at compile time; that warning is noise here - donation is
+    an upper bound the backend may use, not a promise - so it is
+    silenced for the call.
+    """
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return jax.device_get(fn(*args))
 
 
 # ---------------------------------------------------------------------------
@@ -260,8 +411,7 @@ def _episodes_pallas(cfg: acs.ACSConfig, keys: jax.Array, vols: jax.Array,
     """
     B = keys.shape[0]
     n, m = cfg.n_agents, cfg.n_artifacts
-    step_keys = jax.vmap(lambda k: jax.random.split(k, cfg.n_steps))(keys)
-    step_keys = jnp.swapaxes(step_keys, 0, 1)        # (S, B, 2)
+    step_keys = episode_step_keys(keys, cfg.n_steps)  # (S, B, 2)
 
     def draw(k, v, p, r):
         # acs.draw_actions is the single sampling source of truth, so
@@ -326,24 +476,31 @@ def _episodes_pallas(cfg: acs.ACSConfig, keys: jax.Array, vols: jax.Array,
 
 
 def _grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
-             tick_backend: str):
-    """Cached jitted grid program for one static configuration.
+             tick_backend: str, plan: ShardPlan):
+    """Cached (possibly device-sharded) grid program for one static
+    configuration.
 
     Signature of the returned callable::
 
-        fn(vols (V,), p_acts (V,), keys (V, R, 2))
+        fn(vols (V,), p_acts (V,), base_keys (V, 2), run_ids (R,))
             -> dict of (n_variants, V, R) arrays
 
-    Variant axis: ``[broadcast, coherent]`` when ``include_broadcast``,
-    else ``[coherent]`` - the baseline runs *inside* the same XLA
-    program as the coherent variant (one compilation, one launch).
+    Episode keys are derived in-program as ``fold_in(base_keys[v],
+    run_ids[r])`` (``acs.run_keys``).  ``run_ids`` carries global run
+    indices, so when the plan shards the ``runs`` axis each device
+    still derives the exact keys of the single-device schedule for its
+    slice.  Variant axis: ``[broadcast, coherent]`` when
+    ``include_broadcast``, else ``[coherent]`` - the baseline runs
+    *inside* the same XLA program as the coherent variant (one
+    compilation, one launch, every device).
     """
     if tick_backend == "pallas" and not _pallas_tick_supported(cfg):
         # The kernel only implements the invalidation strategies; a
         # forced "pallas" on TTL/broadcast/K-staleness configs would
         # silently compute lazy semantics.
         tick_backend = "scan"
-    cache_key = (_static_key(cfg), include_broadcast, tick_backend)
+    cache_key = (_static_key(cfg), include_broadcast, tick_backend,
+                 plan.devices, plan.axis)
     fn = _GRID_CACHE.get(cache_key)
     if fn is not None:
         return fn
@@ -364,8 +521,9 @@ def _grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
 
     coherent = pallas_variant if tick_backend == "pallas" else scan_variant
 
-    def run_grid(vols, p_acts, keys):
+    def run_grid(vols, p_acts, base_keys, run_ids):
         _note_trace()
+        keys = jax.vmap(lambda bk: acs.run_keys(bk, run_ids))(base_keys)
         outs = []
         if include_broadcast:
             # Broadcast is a bulk-inject path with no per-agent kernel;
@@ -374,29 +532,33 @@ def _grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
         outs.append(coherent(cfg, vols, p_acts, keys))
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
 
-    fn = jax.jit(run_grid)
+    fn = _shard_wrap(run_grid, plan, n_cell_operands=3)
     _GRID_CACHE[cache_key] = fn
     return fn
 
 
 def _het_grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
-                 tick_backend: str):
-    """Cached jitted grid program for heterogeneous (rate-matrix)
-    workloads sharing one static configuration.
+                 tick_backend: str, plan: ShardPlan):
+    """Cached (possibly device-sharded) grid program for heterogeneous
+    (rate-matrix) workloads sharing one static configuration.
 
     Signature of the returned callable::
 
         fn(rates: RateMatrices with (W, n) / (W, n, m) leaves,
-           keys (W, R, 2)) -> dict of (n_variants, W, R) arrays
+           base_keys (W, 2), run_ids (R,))
+            -> dict of (n_variants, W, R) arrays
 
     The rate matrices are *traced* tensor axes: one compilation covers
     every workload family of the same static shape, and re-running with
     different rates (new families, perturbed skews) retraces nothing.
-    Variant axis exactly as ``_grid_fn``.
+    Key derivation and sharding exactly as ``_grid_fn``; the
+    ``workloads`` fallback shards the leading W axis of every rate
+    leaf.  Variant axis exactly as ``_grid_fn``.
     """
     if tick_backend == "pallas" and not _pallas_tick_supported(cfg):
         tick_backend = "scan"
-    cache_key = ("het", _static_key(cfg), include_broadcast, tick_backend)
+    cache_key = ("het", _static_key(cfg), include_broadcast, tick_backend,
+                 plan.devices, plan.axis)
     fn = _GRID_CACHE.get(cache_key)
     if fn is not None:
         return fn
@@ -419,30 +581,44 @@ def _het_grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
 
     coherent = pallas_variant if tick_backend == "pallas" else scan_variant
 
-    def run_grid(rates, keys):
+    def run_grid(rates, base_keys, run_ids):
         _note_trace()
+        keys = jax.vmap(lambda bk: acs.run_keys(bk, run_ids))(base_keys)
         outs = []
         if include_broadcast:
             outs.append(scan_variant(bc_cfg, rates, keys))
         outs.append(coherent(cfg, rates, keys))
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
 
-    fn = jax.jit(run_grid)
+    fn = _shard_wrap(run_grid, plan, n_cell_operands=2)
     _GRID_CACHE[cache_key] = fn
     return fn
 
 
+def _base_keys(seeds: Sequence[int]) -> jax.Array:
+    """(V, 2) per-cell base keys: ``PRNGKey(seed_v)``.  Rebuilt fresh
+    on every grid call (the operand is donated to the program)."""
+    return jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+
+
 def _grid_keys(seeds: Sequence[int], n_runs: int) -> jax.Array:
     """(V, R, 2) uint32 key grid: ``fold_in(PRNGKey(seed_v), r)`` -
-    exactly the per-run key schedule of the per-cell path, so fused
-    sweeps reproduce loop results bit-for-bit."""
+    exactly the per-run key schedule the grid programs derive in-device
+    via ``acs.run_keys`` (loop baselines in tests/benches consume this
+    host-side form)."""
     rs = jnp.arange(n_runs)
+    return jnp.stack([
+        acs.run_keys(jax.random.PRNGKey(int(s)), rs) for s in seeds])
 
-    def per_seed(seed: int) -> jax.Array:
-        base = jax.random.PRNGKey(int(seed))
-        return jax.vmap(lambda r: jax.random.fold_in(base, r))(rs)
 
-    return jnp.stack([per_seed(s) for s in seeds])
+def _grid_call(fn, plan: ShardPlan, n_runs: int, *cell_args) -> dict:
+    """Run a grid program: append the (padded) global ``run_ids``
+    operand, execute, and slice off any padded trailing runs."""
+    run_ids = jnp.arange(plan.pad_runs, dtype=jnp.int32)
+    out = _call_grid(fn, *cell_args, run_ids)
+    if plan.pad_runs != n_runs:
+        out = {k: a[..., :n_runs] for k, a in out.items()}
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -512,31 +688,39 @@ def _comparison_from(scn: ScenarioConfig, bc: RunResult,
 
 
 def run_scenario(scn: ScenarioConfig,
-                 tick_backend: Optional[str] = None) -> RunResult:
+                 tick_backend: Optional[str] = None,
+                 devices: Optional[int] = None) -> RunResult:
     """Run ``scn.n_runs`` independent seeded episodes, vmapped.
 
     Uses the module-level jit cache: repeated calls with the same static
     configuration (any volatility / p_act / seed) reuse one compiled
-    program.
+    program.  ``devices`` caps the shard count (default: every local
+    device; 1 forces the unsharded program).
     """
     backend = tick_backend or resolve_tick_backend(scn.acs, scn.n_runs)
-    fn = _grid_fn(scn.acs, include_broadcast=False, tick_backend=backend)
-    out = jax.device_get(fn(
+    plan = shard_plan(1, scn.n_runs, devices)
+    fn = _grid_fn(scn.acs, include_broadcast=False, tick_backend=backend,
+                  plan=plan)
+    out = _grid_call(
+        fn, plan, scn.n_runs,
         jnp.asarray([scn.acs.volatility], jnp.float32),
         jnp.asarray([scn.acs.p_act], jnp.float32),
-        _grid_keys([scn.seed], scn.n_runs)))
+        _base_keys([scn.seed]))
     return _result_from(
         _cell(out, 0, 0), scn.name,
         acs.STRATEGY_NAMES[scn.acs.strategy], scn.n_runs)
 
 
 def compare_grid(scns: Sequence[ScenarioConfig],
-                 tick_backend: Optional[str] = None) -> list[Comparison]:
+                 tick_backend: Optional[str] = None,
+                 devices: Optional[int] = None) -> list[Comparison]:
     """Broadcast-vs-coherent for many scenarios, fused.
 
     Scenarios sharing a static signature (and n_runs) are batched into a
     single XLA program: variant x scenario x run.  Heterogeneous lists
-    still work - each static group compiles once.
+    still work - each static group compiles once.  On a multi-device
+    host each group's program is device-sharded per ``shard_plan``
+    (``devices=1`` forces single-device execution).
     """
     groups: dict = {}
     for i, s in enumerate(scns):
@@ -549,11 +733,14 @@ def compare_grid(scns: Sequence[ScenarioConfig],
         # bulk-inject scan path), so size the threshold on that half.
         backend = tick_backend or resolve_tick_backend(
             cfg, len(sub) * n_runs)
-        fn = _grid_fn(cfg, include_broadcast=True, tick_backend=backend)
-        out = jax.device_get(fn(
+        plan = shard_plan(len(sub), n_runs, devices)
+        fn = _grid_fn(cfg, include_broadcast=True, tick_backend=backend,
+                      plan=plan)
+        out = _grid_call(
+            fn, plan, n_runs,
             jnp.asarray([s.acs.volatility for s in sub], jnp.float32),
             jnp.asarray([s.acs.p_act for s in sub], jnp.float32),
-            _grid_keys([s.seed for s in sub], n_runs)))
+            _base_keys([s.seed for s in sub]))
         for j, i in enumerate(idxs):
             bc = _result_from(_cell(out, 0, j), sub[j].name,
                               acs.STRATEGY_NAMES[acs.BROADCAST], n_runs)
@@ -564,11 +751,13 @@ def compare_grid(scns: Sequence[ScenarioConfig],
 
 
 def compare(scn: ScenarioConfig, strategy_code: Optional[int] = None,
-            tick_backend: Optional[str] = None) -> Comparison:
+            tick_backend: Optional[str] = None,
+            devices: Optional[int] = None) -> Comparison:
     """Run broadcast + coherent variants of one scenario (one program)."""
     coh_scn = scn if strategy_code is None else scn.with_strategy(
         strategy_code)
-    return compare_grid([coh_scn], tick_backend=tick_backend)[0]
+    return compare_grid([coh_scn], tick_backend=tick_backend,
+                        devices=devices)[0]
 
 
 def sweep_cells(base_scn: ScenarioConfig, volatilities,
@@ -591,7 +780,8 @@ def _rate_stack(workloads) -> acs.RateMatrices:
         lambda *xs: jnp.stack(xs), *[w.rates() for w in workloads])
 
 
-def compare_workloads(workloads, tick_backend: Optional[str] = None
+def compare_workloads(workloads, tick_backend: Optional[str] = None,
+                      devices: Optional[int] = None
                       ) -> list["Comparison"]:
     """Broadcast-vs-coherent for heterogeneous workloads, fused.
 
@@ -601,7 +791,9 @@ def compare_workloads(workloads, tick_backend: Optional[str] = None
     sharing a static signature (and n_runs) batch into a single XLA
     program - variant x workload x run - with the rate matrices as
     traced axes, so an entire zoo of families costs ONE compilation and
-    re-running with new or perturbed families costs zero more.
+    re-running with new or perturbed families costs zero more.  On a
+    multi-device host the program shards per ``shard_plan`` (run axis,
+    falling back to the workload axis).
     """
     groups: dict = {}
     for i, w in enumerate(workloads):
@@ -612,10 +804,11 @@ def compare_workloads(workloads, tick_backend: Optional[str] = None
         cfg = sub[0].acs
         backend = tick_backend or resolve_tick_backend(
             cfg, len(sub) * n_runs)
+        plan = shard_plan(len(sub), n_runs, devices)
         fn = _het_grid_fn(cfg, include_broadcast=True,
-                          tick_backend=backend)
-        out = jax.device_get(fn(
-            _rate_stack(sub), _grid_keys([w.seed for w in sub], n_runs)))
+                          tick_backend=backend, plan=plan)
+        out = _grid_call(fn, plan, n_runs, _rate_stack(sub),
+                         _base_keys([w.seed for w in sub]))
         for j, i in enumerate(idxs):
             bc = _result_from(_cell(out, 0, j), sub[j].name,
                               acs.STRATEGY_NAMES[acs.BROADCAST], n_runs)
@@ -626,25 +819,29 @@ def compare_workloads(workloads, tick_backend: Optional[str] = None
     return results
 
 
-def run_workload(w, tick_backend: Optional[str] = None) -> RunResult:
+def run_workload(w, tick_backend: Optional[str] = None,
+                 devices: Optional[int] = None) -> RunResult:
     """Run one heterogeneous workload (no baseline), fused and cached."""
     backend = tick_backend or resolve_tick_backend(w.acs, w.n_runs)
+    plan = shard_plan(1, w.n_runs, devices)
     fn = _het_grid_fn(w.acs, include_broadcast=False,
-                      tick_backend=backend)
-    out = jax.device_get(fn(_rate_stack([w]),
-                            _grid_keys([w.seed], w.n_runs)))
+                      tick_backend=backend, plan=plan)
+    out = _grid_call(fn, plan, w.n_runs, _rate_stack([w]),
+                     _base_keys([w.seed]))
     return _result_from(_cell(out, 0, 0), w.name,
                         acs.STRATEGY_NAMES[w.acs.strategy], w.n_runs)
 
 
 def sweep_volatility(base_scn: ScenarioConfig, volatilities,
                      n_runs: Optional[int] = None,
-                     tick_backend: Optional[str] = None
+                     tick_backend: Optional[str] = None,
+                     devices: Optional[int] = None
                      ) -> list[Comparison]:
     """Fused V-sweep: ONE jitted program for the whole
     ``(variant x volatility x run)`` grid.  Volatility is a traced
     Bernoulli parameter, so a single compilation covers the sweep and is
     reused across sweeps of any volatility values - the fleet-scale
-    path."""
+    path.  On a multi-device host the program is device-sharded
+    (``shard_plan``); ledgers are bit-identical at any device count."""
     return compare_grid(sweep_cells(base_scn, volatilities, n_runs),
-                        tick_backend=tick_backend)
+                        tick_backend=tick_backend, devices=devices)
