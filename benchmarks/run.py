@@ -37,6 +37,7 @@ MODULES = {
     "prompt_cache_amplification": "promptcache",
     "staleness_tradeoff": "staleness",
     "serving_flops": "serving",
+    "service_bench": "service",
     "kernel_micro": "kernels",
     # last: its cold-compile measurement clears the jit caches, which
     # would force the modules after it to recompile warm programs.

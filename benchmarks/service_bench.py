@@ -1,0 +1,188 @@
+"""Coherence-service load benchmark: concurrent-client throughput,
+decision latency and token savings vs broadcast.
+
+Drives the asyncio broker (``repro.service``) with 32 concurrent
+clients per workload family in lockstep rounds (a round = one SS8.1
+orchestration step, which makes the broadcast baseline exact and the
+coherent token totals deterministic for a fixed seed).  The
+``uniform`` row is the paper's homogeneous scenario at V=0.10 under
+the lazy strategy - the acceptance row: its savings must clear 80%
+and its captured decision trace must replay **bit-exactly** through
+the four-way differential oracle (protocol / vectorized ACS / Pallas
+kernel / model checker).
+
+Writes ``BENCH_service.json`` at the repo root (schema in
+``benchmarks/README.md``) so service latency/savings are tracked and
+perf-gated across PRs (``scripts/bench_gate.py``).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import pathlib
+
+import jax
+
+from benchmarks.common import (BenchRow, bench_steps, fast_mode, fmt_pct,
+                               md_table, write_results)
+from repro.service import (BrokerConfig, CoherenceBroker, drive_workload,
+                           verify_broker)
+from repro.service.batching import resolve_decide_backend
+from repro.sim import workloads
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_JSON = REPO_ROOT / "BENCH_service.json"
+
+#: the measured service grid (fast mode shrinks rounds, never clients -
+#: the acceptance criterion is >= 32 *concurrent* clients).
+N_CLIENTS = 32
+N_ARTIFACTS = 6
+N_ROUNDS = 40
+ARTIFACT_TOKENS = 4096
+STRATEGY = "lazy"
+MIN_ACCEPT_SAVINGS = 0.80
+
+#: benchmark families: the acceptance row plus the structured zoo.
+FAMILIES = ("uniform", "bursty", "zipf", "hierarchical", "rag",
+            "pipeline", "ping_pong")
+FAMILY_SEEDS = {f: 20260701 + i for i, f in enumerate(FAMILIES)}
+
+
+def _workload(family: str, n_rounds: int):
+    from repro.launch.service import build_workload
+    return build_workload(
+        family, n_clients=N_CLIENTS, n_artifacts=N_ARTIFACTS,
+        artifact_tokens=ARTIFACT_TOKENS, n_rounds=n_rounds,
+        seed=FAMILY_SEEDS[family])
+
+
+def _broker_config() -> BrokerConfig:
+    return BrokerConfig(
+        n_agents=N_CLIENTS,
+        artifacts=tuple(f"artifact-{d}" for d in range(N_ARTIFACTS)),
+        artifact_tokens=ARTIFACT_TOKENS, strategy=STRATEGY)
+
+
+async def _measure_family(family: str, n_rounds: int,
+                          verify: bool) -> dict:
+    w = _workload(family, n_rounds)
+    async with CoherenceBroker(_broker_config()) as broker:
+        rep = await drive_workload(broker, w, n_rounds,
+                                   seed=FAMILY_SEEDS[family])
+        stats = broker.stats()
+        row = {
+            "family": family,
+            "name": w.name,
+            "description": w.description,
+            "effective_volatility": w.effective_volatility(),
+            "actions": rep.n_actions,
+            "batches": stats["n_batches"],
+            "mean_batch": stats["mean_batch"],
+            "throughput_dps": rep.throughput_dps,
+            "p50_ms": rep.latency_ms(50),
+            "p99_ms": rep.latency_ms(99),
+            "coherent_tokens": rep.coherent_tokens,
+            "broadcast_tokens": rep.broadcast_tokens,
+            "savings_vs_broadcast": rep.savings_vs_broadcast,
+            "cache_hit_rate": stats["cache_hit_rate"],
+        }
+        if verify:
+            report = verify_broker(broker, name=f"service:{family}")
+            row["oracle_replay"] = {
+                "bit_exact": True,
+                "implementations": list(report.implementations),
+                "n_actions": report.trace.n_actions,
+            }
+        return row
+
+
+async def _warmup() -> None:
+    """Compile the decision program outside the timed runs (the jit
+    cache is keyed on the static broker config, so the measured brokers
+    reuse it)."""
+    w = _workload("uniform", 2)
+    async with CoherenceBroker(_broker_config()) as broker:
+        await drive_workload(broker, w, 2, seed=0)
+
+
+def run() -> list:
+    n_rounds = bench_steps(N_ROUNDS)
+    cfg = _broker_config()
+    decide_backend = resolve_decide_backend(cfg.acs_config())
+    asyncio.run(_warmup())
+
+    rows_payload = []
+    for family in FAMILIES:
+        rows_payload.append(asyncio.run(_measure_family(
+            family, n_rounds, verify=(family == "uniform"))))
+
+    accept_row = rows_payload[0]
+    assert accept_row["family"] == "uniform"
+    if accept_row["savings_vs_broadcast"] < MIN_ACCEPT_SAVINGS:
+        raise AssertionError(
+            f"acceptance: uniform V=0.10 lazy savings "
+            f"{accept_row['savings_vs_broadcast']:.3f} < "
+            f"{MIN_ACCEPT_SAVINGS}")
+
+    payload = {
+        "schema_version": 1,
+        "fast_mode": fast_mode(),
+        "backend": jax.default_backend(),
+        "decide_backend": decide_backend,
+        "grid": {
+            "families": list(FAMILIES),
+            "n_clients": N_CLIENTS,
+            "n_artifacts": N_ARTIFACTS,
+            "n_rounds": n_rounds,
+            "artifact_tokens": ARTIFACT_TOKENS,
+            "strategy": STRATEGY,
+        },
+        "families": rows_payload,
+        "acceptance": {
+            "family": "uniform",
+            "volatility": 0.10,
+            "strategy": STRATEGY,
+            "n_clients": N_CLIENTS,
+            "min_savings": MIN_ACCEPT_SAVINGS,
+            "savings": accept_row["savings_vs_broadcast"],
+            "oracle_replay": accept_row["oracle_replay"],
+        },
+    }
+    if not fast_mode():
+        # repo-root artifact = cross-PR trajectory; smoke runs must not
+        # clobber it.
+        BENCH_JSON.write_text(json.dumps(payload, indent=2,
+                                         default=float))
+
+    table = [[r["family"], f"{r['effective_volatility']:.3f}",
+              f"{r['throughput_dps']:,.0f}",
+              f"{r['p50_ms']:.2f} / {r['p99_ms']:.2f}",
+              fmt_pct(r["savings_vs_broadcast"]),
+              fmt_pct(r["cache_hit_rate"])]
+             for r in rows_payload]
+    accept_oracle = accept_row["oracle_replay"]
+    md = ("### Coherence service - concurrent-client load benchmark\n\n"
+          + md_table(["family", "eff. V", "decisions/s",
+                      "p50/p99 ms", "savings", "CHR"], table)
+          + f"\n{N_CLIENTS} concurrent clients x {n_rounds} rounds per "
+          f"family, strategy {STRATEGY}, decide backend "
+          f"{decide_backend}.  Acceptance: uniform V=0.10 savings "
+          f"{accept_row['savings_vs_broadcast']:.1%} (floor "
+          f"{MIN_ACCEPT_SAVINGS:.0%}); captured trace replayed "
+          f"bit-exactly through "
+          f"{', '.join(accept_oracle['implementations'])}.\n")
+
+    rows = [BenchRow(
+        name=f"service/{r['family']}",
+        us_per_call=1e6 / max(r["throughput_dps"], 1e-9),
+        derived=(f"savings={r['savings_vs_broadcast'] * 100:.1f}% "
+                 f"p99={r['p99_ms']:.2f}ms"))
+        for r in rows_payload]
+    write_results("service_bench", rows, md, extra=payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,0 +1,100 @@
+"""Coherent-service quickstart: a planner/worker team on the broker.
+
+A planner rewrites a shared plan; workers read the plan and publish
+results - through three different framework adapter styles over ONE
+broker, to show the adapters are a veneer over the same coherence
+layer:
+
+  * the planner writes via the framework-neutral ``CoherentTool``;
+  * workers read/write via a LangGraph-style async node;
+  * a reviewer polls via a CrewAI-style sync tool on a
+    ``ServicePortal`` background loop.
+
+At the end the captured decision trace is replayed bit-for-bit through
+the four-way differential oracle (protocol / vectorized ACS / Pallas
+kernel / model checker) - the live service and the verified simulator
+are the same machine.
+
+Run:  PYTHONPATH=src python examples/coherent_service_demo.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+
+from repro.service import (BrokerConfig, CoherenceBroker, CoherentClient,
+                           CoherentTool, ServicePortal, crewai_tool,
+                           langgraph_node, verify_broker)
+
+ARTIFACTS = ("plan", "result-a", "result-b")
+
+
+async def team_round(broker: CoherenceBroker, round_idx: int) -> None:
+    planner = CoherentTool(CoherentClient(broker, 0, name="planner"))
+    workers = [
+        langgraph_node(CoherentClient(broker, 1, name="worker-a"),
+                       reads=("plan",)),
+        langgraph_node(CoherentClient(broker, 2, name="worker-b"),
+                       reads=("plan",)),
+    ]
+    # planner revises the plan every third round, else re-reads it
+    if round_idx % 3 == 0:
+        await planner.acall("write", "plan",
+                            f"plan revision {round_idx}")
+    else:
+        await planner.acall("read", "plan")
+    # workers run concurrently: read the plan, publish their result
+    await asyncio.gather(*(
+        worker({"artifact_updates":
+                {f"result-{tag}": f"result {round_idx} from {tag}"}})
+        for worker, tag in zip(workers, "ab")))
+
+
+async def run_team(broker: CoherenceBroker, rounds: int) -> None:
+    for i in range(rounds):
+        await team_round(broker, i)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run (CI example-smoke)")
+    args = ap.parse_args(argv)
+    rounds = 4 if args.smoke else args.rounds
+
+    config = BrokerConfig(n_agents=4, artifacts=ARTIFACTS,
+                          artifact_tokens=128, strategy="lazy")
+
+    # async team via asyncio; then a sync reviewer via the portal,
+    # against the SAME broker instance.
+    with ServicePortal(config) as portal:
+        portal.call(run_team(portal.broker, rounds))
+        reviewer = crewai_tool(portal.client(3, name="reviewer"))
+        print(reviewer.run("read", "plan"))
+        print(reviewer.run("read", "result-a"))
+        print(reviewer.run("read", "result-a"), "(second read: coherent)")
+
+        broker = portal.broker
+        stats = broker.stats()
+        n, m = config.n_agents, len(ARTIFACTS)
+        broadcast = stats["n_batches"] * n * m * (
+            config.artifact_tokens + 12)
+        savings = 1.0 - stats["total_tokens"] / max(broadcast, 1)
+        print(f"\n{stats['n_actions']} actions in "
+              f"{stats['n_batches']} micro-batches "
+              f"(mean batch {stats['mean_batch']:.1f}); "
+              f"{stats['total_tokens']} tokens vs {broadcast} broadcast "
+              f"= {savings:.1%} saved; "
+              f"cache-hit rate {stats['cache_hit_rate']:.1%}")
+
+        report = verify_broker(broker, name="service:demo")
+        print(f"oracle replay: bit-exact across "
+              f"{', '.join(report.implementations)}")
+        return {"stats": stats, "savings": savings,
+                "implementations": report.implementations}
+
+
+if __name__ == "__main__":
+    main()

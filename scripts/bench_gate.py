@@ -3,9 +3,9 @@
 silently erode.
 
 Compares a *fresh* set of benchmark payloads against the committed
-baselines (``BENCH_sweep.json`` / ``BENCH_workloads.json`` at the repo
-root) with explicit tolerances, and exits non-zero on drift.  CI's
-``bench-gate`` job runs it two ways:
+baselines (``BENCH_sweep.json`` / ``BENCH_workloads.json`` /
+``BENCH_service.json`` at the repo root) with explicit tolerances, and
+exits non-zero on drift.  CI's ``bench-gate`` job runs it two ways:
 
   1. ``--run-benches`` (with ``REPRO_BENCH_FAST=1``): run the sweep +
      zoo benches and gate the fresh payloads.  Savings are
@@ -31,6 +31,12 @@ Checks (see ``--help`` for every tolerance knob):
                within --throughput-rel-tol of baseline;
                cross-mode: speedup >= --min-speedup and sims/s >=
                --throughput-floor-frac x baseline
+  service      family set + >= 32 concurrent clients + acceptance
+               (savings >= floor, oracle replay bit-exact); per-family
+               savings within --service-savings-tol(-x); p50/p99
+               within --latency-factor x baseline (cross-mode OR'd
+               with the --latency-ceiling-ms pathology bound);
+               decisions/s >= --throughput-floor-frac x baseline
 """
 
 from __future__ import annotations
@@ -45,11 +51,19 @@ RESULTS_DIR = REPO_ROOT / "benchmarks" / "results"
 BASELINES = {
     "sweep": REPO_ROOT / "BENCH_sweep.json",
     "zoo": REPO_ROOT / "BENCH_workloads.json",
+    "service": REPO_ROOT / "BENCH_service.json",
+}
+#: benchmarks/results payload file per baseline key
+RESULT_FILES = {
+    "sweep": "sweep_engine.json",
+    "zoo": "workload_zoo.json",
+    "service": "service_bench.json",
 }
 #: fresh fast-mode payloads written for CI artifact upload
 FRESH_OUT = {
     "sweep": RESULTS_DIR / "BENCH_sweep.fresh.json",
     "zoo": RESULTS_DIR / "BENCH_workloads.fresh.json",
+    "service": RESULTS_DIR / "BENCH_service.fresh.json",
 }
 
 
@@ -68,25 +82,26 @@ class Gate:
 def _load(path: pathlib.Path) -> dict:
     if not path.exists():
         sys.exit(f"bench_gate: missing baseline {path} - run "
-                 f"`python -m benchmarks.run sweep zoo` (full mode) "
-                 f"and commit the BENCH_*.json files")
+                 f"`python -m benchmarks.run sweep zoo service` (full "
+                 f"mode) and commit the BENCH_*.json files")
     return json.loads(path.read_text())
 
 
 def _run_benches() -> dict:
-    """Run the two BENCH-producing modules in-process and collect their
+    """Run the BENCH-producing modules in-process and collect their
     payloads (the ``extra`` blob of benchmarks/results/<module>.json is
     exactly the BENCH payload)."""
     sys.path.insert(0, str(REPO_ROOT))
     sys.path.insert(0, str(REPO_ROOT / "src"))
-    from benchmarks import sweep_engine, workload_zoo  # noqa: E402
+    from benchmarks import (service_bench, sweep_engine,  # noqa: E402
+                            workload_zoo)
     sweep_engine.run()
     workload_zoo.run()
+    service_bench.run()
     fresh = {
-        "sweep": json.loads(
-            (RESULTS_DIR / "sweep_engine.json").read_text())["extra"],
-        "zoo": json.loads(
-            (RESULTS_DIR / "workload_zoo.json").read_text())["extra"],
+        name: json.loads(
+            (RESULTS_DIR / fname).read_text())["extra"]
+        for name, fname in RESULT_FILES.items()
     }
     for name, payload in fresh.items():
         FRESH_OUT[name].parent.mkdir(parents=True, exist_ok=True)
@@ -95,8 +110,8 @@ def _run_benches() -> dict:
     return fresh
 
 
-def _inject(fresh: dict, throughput_pct: float, savings_drift: float
-            ) -> dict:
+def _inject(fresh: dict, throughput_pct: float, savings_drift: float,
+            latency_factor: float) -> dict:
     """Apply a synthetic regression to the fresh payloads (gate
     self-test: the comparator must flag it)."""
     f = json.loads(json.dumps(fresh, default=float))  # deep copy
@@ -106,13 +121,19 @@ def _inject(fresh: dict, throughput_pct: float, savings_drift: float
     f["zoo"]["sims_per_s"] *= scale
     for fam in f["zoo"]["families"]:
         fam["savings_mean"] -= savings_drift
+    for fam in f["service"]["families"]:
+        fam["throughput_dps"] *= scale
+        fam["savings_vs_broadcast"] -= savings_drift
+        fam["p50_ms"] *= latency_factor
+        fam["p99_ms"] *= latency_factor
+    f["service"]["acceptance"]["savings"] -= savings_drift
     return f
 
 
 def run_gate(fresh: dict, base: dict, args) -> int:
     gate = Gate()
     same_mode = all(fresh[k].get("fast_mode") == base[k].get("fast_mode")
-                    for k in ("sweep", "zoo"))
+                    for k in RESULT_FILES)
     savings_tol = args.savings_tol if same_mode else args.savings_tol_x
     mode = "same-grid" if same_mode else "cross-mode (fast vs full)"
     print(f"bench-gate: comparing {mode}")
@@ -185,6 +206,57 @@ def run_gate(fresh: dict, base: dict, args) -> int:
             gate.check(got >= floor, label,
                        f"{got:.1f} >= {floor:.1f} (sanity floor)")
 
+    # --- coherence service: latency + savings + acceptance
+    fsv, bsv = fresh["service"], base["service"]
+    svc_tol = (args.service_savings_tol if same_mode
+               else args.service_savings_tol_x)
+    print(f"[service]  savings tol ±{svc_tol:.3f} abs, "
+          f"p50/p99 <= {args.latency_factor:.1f}x baseline"
+          + ("" if same_mode
+             else f" or {args.latency_ceiling_ms:.0f}ms ceiling"))
+    f_sfams = [f["family"] for f in fsv["families"]]
+    b_sfams = [f["family"] for f in bsv["families"]]
+    gate.check(f_sfams == b_sfams, "service.families",
+               f"{f_sfams} vs {b_sfams}")
+    gate.check(fsv["grid"]["n_clients"] >= 32, "service.n_clients",
+               f"{fsv['grid']['n_clients']} >= 32 concurrent clients")
+    accept = fsv.get("acceptance", {})
+    gate.check(bool(accept.get("oracle_replay", {}).get("bit_exact")),
+               "service.oracle_replay",
+               "captured trace replays bit-exactly through "
+               f"{accept.get('oracle_replay', {}).get('implementations')}")
+    gate.check(accept.get("savings", 0.0) >= accept.get(
+                   "min_savings", 0.80),
+               "service.acceptance.savings",
+               f"{accept.get('savings', 0.0):.4f} >= "
+               f"{accept.get('min_savings', 0.80):.2f} "
+               f"(uniform V=0.10, lazy)")
+    b_by_sfam = {f["family"]: f for f in bsv["families"]}
+    for fam in fsv["families"]:
+        b = b_by_sfam.get(fam["family"])
+        if b is None:
+            continue
+        delta = fam["savings_vs_broadcast"] - b["savings_vs_broadcast"]
+        gate.check(abs(delta) <= svc_tol,
+                   f"service.savings[{fam['family']}]",
+                   f"{fam['savings_vs_broadcast']:.4f} vs "
+                   f"{b['savings_vs_broadcast']:.4f} "
+                   f"(delta {delta:+.4f})")
+        for pct in ("p50_ms", "p99_ms"):
+            ceiling = b[pct] * args.latency_factor
+            if not same_mode:
+                # cross-machine: CI latency is noisy - pathology bound
+                ceiling = max(ceiling, args.latency_ceiling_ms)
+            gate.check(fam[pct] <= ceiling,
+                       f"service.{pct}[{fam['family']}]",
+                       f"{fam[pct]:.3f} <= {ceiling:.3f} "
+                       f"(baseline {b[pct]:.3f})")
+        floor = b["throughput_dps"] * args.throughput_floor_frac
+        gate.check(fam["throughput_dps"] >= floor,
+                   f"service.throughput[{fam['family']}]",
+                   f"{fam['throughput_dps']:.1f} >= {floor:.1f} "
+                   f"(sanity floor)")
+
     if gate.failures:
         print(f"\nbench-gate: RED - {len(gate.failures)} check(s) "
               f"failed:")
@@ -217,6 +289,11 @@ def main(argv=None) -> int:
                     metavar="ABS",
                     help="subtract ABS from every fresh family "
                     "savings_mean (self-test)")
+    ap.add_argument("--inject-latency-regression", type=float,
+                    default=1.0, metavar="FACTOR",
+                    help="multiply fresh service p50/p99 by FACTOR "
+                    "before comparing - the gate must go red "
+                    "(self-test; use FACTOR > --latency-factor)")
     ap.add_argument("--savings-tol", type=float, default=0.005,
                     help="same-grid per-family savings tolerance, "
                     "absolute (default 0.005 - savings are "
@@ -234,8 +311,23 @@ def main(argv=None) -> int:
                     "fast mode; a fused-path slowdown of >~12x goes "
                     "red)")
     ap.add_argument("--throughput-floor-frac", type=float, default=0.02,
-                    help="cross-machine absolute sims/s sanity floor, "
-                    "as a fraction of baseline")
+                    help="cross-machine absolute sims/s (and service "
+                    "decisions/s) sanity floor, as a fraction of "
+                    "baseline")
+    ap.add_argument("--service-savings-tol", type=float, default=0.02,
+                    help="same-grid per-family service savings "
+                    "tolerance, absolute (lockstep rounds are "
+                    "deterministic modulo rare batch splits)")
+    ap.add_argument("--service-savings-tol-x", type=float, default=0.10,
+                    help="cross-mode service savings tolerance "
+                    "(fast-mode rounds vs full baseline)")
+    ap.add_argument("--latency-factor", type=float, default=3.0,
+                    help="service p50/p99 must stay within this factor "
+                    "of baseline (same-grid; cross-mode it is OR'd "
+                    "with --latency-ceiling-ms)")
+    ap.add_argument("--latency-ceiling-ms", type=float, default=500.0,
+                    help="cross-machine absolute service-latency "
+                    "pathology bound (ms)")
     args = ap.parse_args(argv)
 
     base = {k: _load(p) for k, p in BASELINES.items()}
@@ -243,20 +335,22 @@ def main(argv=None) -> int:
         fresh = json.loads(json.dumps(base, default=float))
     elif args.results_dir:
         fresh = {
-            "sweep": json.loads((args.results_dir /
-                                 "sweep_engine.json").read_text())["extra"],
-            "zoo": json.loads((args.results_dir /
-                               "workload_zoo.json").read_text())["extra"],
+            name: json.loads((args.results_dir /
+                              fname).read_text())["extra"]
+            for name, fname in RESULT_FILES.items()
         }
     else:
         fresh = _run_benches()
 
-    if args.inject_throughput_regression or args.inject_savings_drift:
+    if (args.inject_throughput_regression or args.inject_savings_drift
+            or args.inject_latency_regression != 1.0):
         print(f"bench-gate: INJECTING synthetic regression "
               f"(throughput -{args.inject_throughput_regression:.0%}, "
-              f"savings -{args.inject_savings_drift})")
+              f"savings -{args.inject_savings_drift}, "
+              f"latency x{args.inject_latency_regression:.1f})")
         fresh = _inject(fresh, args.inject_throughput_regression,
-                        args.inject_savings_drift)
+                        args.inject_savings_drift,
+                        args.inject_latency_regression)
 
     return run_gate(fresh, base, args)
 

@@ -5,8 +5,9 @@
 #   - fails if cache dirs (__pycache__ / .pytest_cache / .hypothesis)
 #     ever become git-tracked
 #   - runs the full pytest suite (tier-1 verify from ROADMAP.md)
-#   - runs the sweep-engine + table benches in REPRO_BENCH_FAST mode
-#     (shrunk n_runs/n_steps; completes in well under a minute)
+#   - runs the sweep-engine + table + coherence-service benches in
+#     REPRO_BENCH_FAST mode (shrunk n_runs/n_steps/rounds; completes
+#     in well under a minute)
 #   - replays the committed BENCH baselines through the perf gate
 #     (plumbing check; CI's bench-gate job does the fresh-run gating)
 set -euo pipefail
@@ -29,7 +30,7 @@ python -m pytest -x -q
 
 echo
 echo "== smoke benches (REPRO_BENCH_FAST=1) =="
-REPRO_BENCH_FAST=1 python -m benchmarks.run sweep table1 table2 cliff zoo
+REPRO_BENCH_FAST=1 python -m benchmarks.run sweep table1 table2 cliff zoo service
 
 echo
 echo "== bench gate (baseline replay) =="

@@ -357,6 +357,77 @@ def _do_write(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
     return arrays, met
 
 
+class DecisionOutcome(NamedTuple):
+    """Per-agent result of one serialized authority pass.
+
+    The simulation discards this (only the aggregate ledger matters);
+    the live coherence service (``repro.service``) uses it to answer
+    each client's request: did the action trigger a coherence fill
+    (content must be shipped) and which canonical version is the agent
+    synced to after its serialization slot.
+    """
+
+    miss: jax.Array     # (n,) bool: action triggered a coherence fill
+    version: jax.Array  # (n,) int32: last_sync[a, d] right after a's slot
+
+
+def apply_actions(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
+                  acts: jax.Array, arts: jax.Array, writes: jax.Array):
+    """Apply one serialized authority pass for a fixed action vector.
+
+    ``acts``/``writes`` are (n,) bools, ``arts`` (n,) int32 - at most
+    one action per agent, processed in ascending agent order (the
+    authority's serialization order, same as the Pallas kernel).  This
+    is the single source of the per-action semantics: ``tick`` samples
+    actions and delegates here, and the coherence service's
+    micro-batching layer (``repro.service.batching``) calls it with
+    *real* client requests, so live decisions and simulated episodes
+    execute literally the same code.
+
+    Returns ``(arrays, metrics, DecisionOutcome)``.
+    """
+
+    def agent_body(a, carry):
+        arrays, met, out_miss, out_ver = carry
+        act = acts[a]
+        d = arts[a]
+        is_write = writes[a]
+
+        def do_act(args):
+            arrays, met, out_miss, out_ver = args
+            arrays = arrays._replace(
+                agent_actions=arrays.agent_actions.at[a].add(1))
+            fetches_before = met.n_fetches
+            if cfg.strategy == BROADCAST:
+                # Everything is already injected; actions are free.
+                met = met._replace(
+                    n_reads=met.n_reads + jnp.where(is_write, 0, 1),
+                    n_writes=met.n_writes + jnp.where(is_write, 1, 0),
+                    n_hits=met.n_hits + 1,
+                )
+                # Writes still bump the canonical version.
+                arrays = arrays._replace(version=jnp.where(
+                    is_write, arrays.version.at[d].add(1), arrays.version))
+            else:
+                arrays, met = jax.lax.cond(
+                    is_write,
+                    lambda args: _do_write(cfg, *args, a, d),
+                    lambda args: _do_read(cfg, *args, a, d),
+                    (arrays, met))
+            out_miss = out_miss.at[a].set(met.n_fetches > fetches_before)
+            out_ver = out_ver.at[a].set(arrays.last_sync[a, d])
+            return arrays, met, out_miss, out_ver
+
+        return jax.lax.cond(act, do_act, lambda x: x,
+                            (arrays, met, out_miss, out_ver))
+
+    arrays, met, miss, ver = jax.lax.fori_loop(
+        0, cfg.n_agents, agent_body,
+        (arrays, met, jnp.zeros((cfg.n_agents,), jnp.bool_),
+         jnp.zeros((cfg.n_agents,), jnp.int32)))
+    return arrays, met, DecisionOutcome(miss, ver)
+
+
 def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
          key: jax.Array, step: jax.Array,
          volatility=None, p_act=None, rates: RateMatrices | None = None):
@@ -426,37 +497,7 @@ def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
         arrays, met = jax.lax.cond(
             do_refresh, refresh, lambda x: x, (arrays, met))
 
-    def agent_body(a, carry):
-        arrays, met = carry
-        act = acts[a]
-        d = arts[a]
-        is_write = writes[a]
-
-        def do_act(args):
-            arrays, met = args
-            arrays = arrays._replace(
-                agent_actions=arrays.agent_actions.at[a].add(1))
-            if cfg.strategy == BROADCAST:
-                # Everything is already injected; actions are free.
-                met = met._replace(
-                    n_reads=met.n_reads + jnp.where(is_write, 0, 1),
-                    n_writes=met.n_writes + jnp.where(is_write, 1, 0),
-                    n_hits=met.n_hits + 1,
-                )
-                # Writes still bump the canonical version.
-                arrays = arrays._replace(version=jnp.where(
-                    is_write, arrays.version.at[d].add(1), arrays.version))
-                return arrays, met
-            return jax.lax.cond(
-                is_write,
-                lambda args: _do_write(cfg, *args, a, d),
-                lambda args: _do_read(cfg, *args, a, d),
-                (arrays, met))
-
-        return jax.lax.cond(act, do_act, lambda x: x, (arrays, met))
-
-    arrays, met = jax.lax.fori_loop(
-        0, cfg.n_agents, agent_body, (arrays, met))
+    arrays, met, _ = apply_actions(cfg, arrays, met, acts, arts, writes)
     return arrays, met
 
 

@@ -25,6 +25,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.states import MESIState
@@ -193,3 +194,71 @@ def mesi_tick_pallas(state, version, last_sync, reads_since_fetch,
     if pad:
         out = tuple(o[:B] for o in out)
     return out
+
+
+def mesi_decision_batch(state, version, last_sync, reads_since_fetch,
+                        acts, arts, writes, *, artifact_tokens: int,
+                        eager: bool = False, access_k: int = 0,
+                        signal_tokens: int = 12,
+                        interpret: bool | None = None):
+    """One micro-batch of live coherence decisions via prefix-replicated
+    simulations (the ``repro.service.batching`` kernel route).
+
+    The kernel emits per-*simulation* aggregate counters, not
+    per-request outcomes, yet a live broker must answer each request
+    individually (fill vs hit, served version).  Trick: replicate the
+    single directory into ``B = k+1`` sims where sim ``j`` enables only
+    the first ``j`` active agents (in the authority's ascending-agent
+    serialization order).  Agent processing is sequential and
+    deterministic, so sim ``j`` agrees with the full batch on its
+    prefix, and request ``j``'s outcome is the counter delta between
+    consecutive prefix sims - every decision of the batch falls out of
+    ONE ``mesi_tick_pallas`` call, vectorized over the sim lanes the
+    kernel already batches on.
+
+    Inputs: single-directory arrays - ``state``/``last_sync``/``reads``
+    (n, m) int32, ``version`` (m,) int32 - plus the request vectors
+    ``acts``/``arts``/``writes`` (n,) (at most one request per agent).
+    Returns ``(state', version', sync', reads', counters (8,),
+    miss (n,) bool, served_version (n,) int32)`` where the primed
+    arrays/counters are the full-batch transition.
+    """
+    n, m = state.shape
+    acts_np = np.asarray(acts, bool)
+    order = np.flatnonzero(acts_np)          # ascending agent order
+    k = int(order.size)
+    if k == 0:
+        zc = jnp.zeros((N_COUNTERS,), jnp.int32)
+        return (state, version, last_sync, reads_since_fetch, zc,
+                jnp.zeros((n,), bool), jnp.zeros((n,), jnp.int32))
+    # sim j enables the first j requests; sim 0 is the no-op baseline.
+    # B is padded to the FIXED n+1 (rows past k repeat the full batch,
+    # so their counter deltas are zero) - every micro-batch size shares
+    # one compiled program instead of one Mosaic compile per distinct k.
+    B = n + 1
+    acts_b = np.zeros((B, n), np.int32)
+    for j, a in enumerate(order):
+        acts_b[j + 1:, a] = 1
+    tile = lambda arr: jnp.broadcast_to(arr, (B,) + arr.shape)
+    st, ver, sy, rd, cnt = mesi_tick_pallas(
+        tile(state), tile(version), tile(last_sync),
+        tile(reads_since_fetch), jnp.asarray(acts_b),
+        tile(jnp.asarray(arts, jnp.int32)),
+        tile(jnp.asarray(writes, jnp.int32)),
+        artifact_tokens=artifact_tokens, eager=eager, access_k=access_k,
+        signal_tokens=signal_tokens, block_sims=B, interpret=interpret)
+    cnt_np = np.asarray(cnt, np.int64)
+    arts_np = np.asarray(arts, np.int64)
+    sync_np = np.asarray(sy, np.int64)
+    miss = np.zeros((n,), bool)
+    served = np.zeros((n,), np.int32)
+    for j, a in enumerate(order):
+        # counter slot 3 = n_fetches; the delta between prefix j+1 and
+        # prefix j is exactly request j's fill.
+        miss[a] = (cnt_np[j + 1, 3] - cnt_np[j, 3]) == 1
+        # sim j+1 processed request j last: its sync cell is the version
+        # agent a is synced to at its serialization slot (later eager
+        # pushes in the full batch must not leak into this answer).
+        served[a] = sync_np[j + 1, a, arts_np[a]]
+    return (st[-1], ver[-1], sy[-1], rd[-1], cnt[-1],
+            jnp.asarray(miss), jnp.asarray(served))

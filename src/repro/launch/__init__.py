@@ -1,1 +1,3 @@
-"""Launchers: mesh builders, multi-pod dry-run, train/serve drivers."""
+"""Launchers: mesh builders, multi-pod dry-run, train/serve drivers,
+and the artifact-coherence service entry point (``repro.launch.service``
+- in-process load runs or the JSON-lines TCP frontend)."""

@@ -1,0 +1,43 @@
+"""Artifact-coherence service: the paper's reference implementation as
+a servable async system (contribution 5).
+
+Public surface (stable import paths for examples and docs):
+
+  * :class:`CoherenceBroker` / :class:`BrokerConfig` - the asyncio
+    single-writer authority with micro-batched coherence decisions;
+  * :class:`CoherentClient` / :func:`make_clients` /
+    :class:`ServicePortal` / :class:`SyncCoherentClient` - per-agent
+    clients (async-native, plus a sync bridge for frameworks);
+  * :class:`CoherentTool`, :func:`langgraph_node`, :func:`crewai_tool`,
+    :func:`autogen_functions` - the thin framework adapter layer;
+  * :class:`ServiceTrace` / :func:`replay_trace` /
+    :func:`verify_broker` - oracle-replayable decision traces;
+  * :func:`drive_workload` / :class:`LoadReport` - the concurrent load
+    generator over workload-zoo rate matrices.
+"""
+
+from repro.service.broker import (BROKER_STRATEGIES, BrokerConfig,
+                                  CoherenceBroker, InvariantViolation,
+                                  ReadResult, WriteResult)
+from repro.service.batching import (BatchDecider, BatchDecision,
+                                    resolve_decide_backend)
+from repro.service.client import (CoherentClient, ServicePortal,
+                                  SyncCoherentClient, make_clients)
+from repro.service.adapters import (CoherentTool, ToolResult,
+                                    autogen_functions, crewai_tool,
+                                    langgraph_node)
+from repro.service.trace import (ServiceTrace, StepRecord, replay_trace,
+                                 verify_broker)
+from repro.service.loadgen import LoadReport, drive_workload
+
+__all__ = [
+    "BROKER_STRATEGIES", "BrokerConfig", "CoherenceBroker",
+    "InvariantViolation", "ReadResult", "WriteResult",
+    "BatchDecider", "BatchDecision", "resolve_decide_backend",
+    "CoherentClient", "ServicePortal", "SyncCoherentClient",
+    "make_clients",
+    "CoherentTool", "ToolResult", "autogen_functions", "crewai_tool",
+    "langgraph_node",
+    "ServiceTrace", "StepRecord", "replay_trace", "verify_broker",
+    "LoadReport", "drive_workload",
+]

@@ -1,0 +1,181 @@
+"""Micro-batching decision layer for the artifact-coherence broker.
+
+The broker never decides one request at a time: in-flight read/write
+requests are coalesced into a *micro-batch* (at most one per agent) and
+resolved by ONE call into the coherence state machine - the service
+analog of the fused sweep engine, which amortizes *compilation* across
+a grid the way this layer amortizes *dispatch* across concurrent
+clients.
+
+Two interchangeable execution routes, both bit-exact with the
+simulator (and therefore with the four-way differential oracle):
+
+  ``scan``    one jitted ``acs.apply_actions`` call - literally the
+              simulation's serialized agent pass, compiled once per
+              static broker config (module-level jit cache, same
+              pattern as ``repro.sim.engine``).  Covers every
+              invalidation strategy plus K-staleness enforcement.
+  ``pallas``  one ``kernels.mesi_transition.mesi_decision_batch`` call:
+              the batched MESI transition kernel over prefix-replicated
+              sims, which yields per-request outcomes from the kernel's
+              own counters.  Covers the differential strategies
+              (lazy / eager / access_count) with ``max_stale_steps=0``;
+              staleness diagnostics are scan-route-only, mirroring the
+              oracle's Pallas scope note.
+
+``auto`` resolves to the kernel route on a real TPU backend (where the
+sim engine also routes ticks through the kernel) and to ``scan``
+elsewhere; ``REPRO_SERVICE_DECIDE`` forces either.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acs
+from repro.kernels.backend import interpret_default
+from repro.kernels.mesi_transition import mesi_decision_batch
+
+#: strategies the kernel route supports (== oracle DIFFERENTIAL scope).
+KERNEL_STRATEGIES = (acs.LAZY, acs.EAGER, acs.ACCESS_COUNT)
+
+
+class BatchDecision(NamedTuple):
+    """Host-side result of one coalesced decision pass."""
+
+    miss: np.ndarray     # (n,) bool: request triggered a coherence fill
+    version: np.ndarray  # (n,) int32: version served at the agent's slot
+    ledger_delta: dict   # exact integer counter deltas for this batch
+
+
+def _kernel_supported(cfg: acs.ACSConfig) -> bool:
+    return (cfg.strategy in KERNEL_STRATEGIES
+            and cfg.max_stale_steps == 0)
+
+
+def resolve_decide_backend(cfg: acs.ACSConfig,
+                           backend: str = "auto") -> str:
+    """'scan' | 'pallas' for a broker with static config ``cfg``."""
+    forced = os.environ.get("REPRO_SERVICE_DECIDE", backend)
+    if forced == "scan":
+        return "scan"
+    if forced == "pallas":
+        if not _kernel_supported(cfg):
+            raise ValueError(
+                "pallas decision route covers lazy/eager/access_count "
+                "with max_stale_steps=0; use backend='scan' for "
+                f"strategy={acs.STRATEGY_NAMES[cfg.strategy]} "
+                f"max_stale_steps={cfg.max_stale_steps}")
+        return "pallas"
+    if forced != "auto":
+        raise ValueError(f"unknown decision backend {forced!r}")
+    return ("pallas" if not interpret_default() and _kernel_supported(cfg)
+            else "scan")
+
+
+@functools.lru_cache(maxsize=None)
+def _scan_decider(cfg: acs.ACSConfig):
+    """One compiled serialized-authority pass per static broker config;
+    every micro-batch of the broker's lifetime reuses it."""
+
+    def fn(arrays, met, acts, arts, writes):
+        return acs.apply_actions(cfg, arrays, met, acts, arts, writes)
+
+    return jax.jit(fn)
+
+
+#: ACSMetrics counter fields forwarded into the broker's token ledger.
+_LEDGER_FIELDS = ("fetch_tokens", "push_tokens", "signal_tokens",
+                  "n_fetches", "n_hits", "n_reads", "n_writes",
+                  "n_invalidation_signals")
+
+#: kernel counter slot -> ledger field (mesi_transition layout).
+_KERNEL_SLOTS = {"fetch_tokens": 0, "signal_tokens": 1, "push_tokens": 2,
+                 "n_fetches": 3, "n_hits": 4,
+                 "n_invalidation_signals": 5}
+
+
+class BatchDecider:
+    """Stateful decision engine: owns the directory arrays and applies
+    one coalesced micro-batch per call.
+
+    The broker is the *single writer* of this state - only the flush
+    task calls :meth:`decide`, which is what makes SWMR hold under true
+    asyncio interleaving (enforced with a reentrancy guard, checked by
+    the invariant suite after every batch).
+    """
+
+    def __init__(self, cfg: acs.ACSConfig, backend: str = "auto") -> None:
+        self.cfg = cfg
+        self.backend = resolve_decide_backend(cfg, backend)
+        self.arrays = acs.init_arrays(cfg)
+        self.metrics = acs.init_metrics()
+        self._scan = _scan_decider(cfg) if self.backend == "scan" else None
+        self._deciding = False
+
+    # ------------------------------------------------------------------
+    def decide(self, acts: np.ndarray, arts: np.ndarray,
+               writes: np.ndarray) -> BatchDecision:
+        """Resolve one micro-batch (at most one request per agent)."""
+        if self._deciding:
+            raise RuntimeError(
+                "re-entrant decide(): the broker's single-writer "
+                "discipline was violated")
+        self._deciding = True
+        try:
+            if self.backend == "scan":
+                return self._decide_scan(acts, arts, writes)
+            return self._decide_pallas(acts, arts, writes)
+        finally:
+            self._deciding = False
+
+    # ------------------------------------------------------------------
+    def _decide_scan(self, acts, arts, writes) -> BatchDecision:
+        before = {f: int(getattr(self.metrics, f))
+                  for f in _LEDGER_FIELDS}
+        self.arrays, self.metrics, out = self._scan(
+            self.arrays, self.metrics, jnp.asarray(acts, bool),
+            jnp.asarray(arts, jnp.int32), jnp.asarray(writes, bool))
+        delta = {f: int(getattr(self.metrics, f)) - before[f]
+                 for f in _LEDGER_FIELDS}
+        return BatchDecision(miss=np.asarray(out.miss, bool),
+                             version=np.asarray(out.version, np.int32),
+                             ledger_delta=delta)
+
+    def _decide_pallas(self, acts, arts, writes) -> BatchDecision:
+        a = self.arrays
+        st, ver, sy, rd, cnt, miss, served = mesi_decision_batch(
+            a.state, a.version, a.last_sync, a.reads_since_fetch,
+            np.asarray(acts, bool), np.asarray(arts, np.int32),
+            np.asarray(writes, bool),
+            artifact_tokens=self.cfg.artifact_tokens,
+            eager=self.cfg.strategy == acs.EAGER,
+            access_k=(self.cfg.access_k
+                      if self.cfg.strategy == acs.ACCESS_COUNT else 0),
+            signal_tokens=acs.SIGNAL_TOKENS)
+        acts_np = np.asarray(acts, bool)
+        writes_np = np.asarray(writes, bool)
+        cnt_np = np.asarray(cnt, np.int64)
+        delta = {f: int(cnt_np[slot])
+                 for f, slot in _KERNEL_SLOTS.items()}
+        # the kernel tracks token counters only; action counts come from
+        # the batch itself (same derivation as oracle.replay_pallas).
+        delta["n_reads"] = int((acts_np & ~writes_np).sum())
+        delta["n_writes"] = int((acts_np & writes_np).sum())
+        # agent_actions is a scan-path diagnostic (staleness clocks);
+        # each acting agent performed exactly one action this batch.
+        self.arrays = a._replace(
+            state=st, version=ver, last_sync=sy, reads_since_fetch=rd,
+            agent_actions=a.agent_actions + jnp.asarray(acts_np, jnp.int32))
+        self.metrics = self.metrics._replace(**{
+            f: getattr(self.metrics, f) + delta[f]
+            for f in _LEDGER_FIELDS})
+        return BatchDecision(miss=np.asarray(miss, bool),
+                             version=np.asarray(served, np.int32),
+                             ledger_delta=delta)

@@ -1,0 +1,381 @@
+"""Artifact Coherence Broker: an asyncio single-writer authority.
+
+The simulator answers "how many tokens would a fleet spend"; this
+module answers "serve the fleet".  Many concurrent agent clients issue
+read/write requests against a shared artifact store; the broker is the
+serialization point (paper A2/AS1): all directory mutation happens on
+ONE flush task, so the three verified invariants (SWMR, monotonic
+versioning, K-bounded staleness) hold under true asyncio interleaving
+by construction - and are *checked* after every micro-batch, not
+assumed.
+
+State machinery is reused, not reimplemented:
+
+  * content plane: ``repro.core.protocol``'s ``ArtifactStore`` +
+    ``EventBus`` (``VERSION_UPDATE`` messages on every commit) +
+    ``TokenLedger`` accounting;
+  * decision plane: ``repro.service.batching`` - coalesced micro-batches
+    resolved by the simulator's own serialized authority pass
+    (``acs.apply_actions``) or the batched Pallas MESI kernel;
+  * audit plane: every decision lands in a ``ServiceTrace``
+    (``repro.service.trace``) that replays bit-for-bit through the
+    four-way differential oracle, closing the live-service <->
+    conformance loop.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import time
+from typing import Dict, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.core import acs, invariants
+from repro.core.protocol import (ArtifactStore, EventBus, Message,
+                                 TokenLedger)
+from repro.core.states import MESIState
+from repro.service.batching import BatchDecider
+from repro.service.trace import ServiceTrace
+
+_E = int(MESIState.E)
+
+#: strategies the broker serves.  Broadcast is the *baseline* the bench
+#: compares against analytically; TTL epochs are defined in terms of the
+#: simulator's logical step clock, which a live service does not have.
+BROKER_STRATEGIES = ("lazy", "eager", "access_count")
+
+
+class InvariantViolation(AssertionError):
+    """A verified CCS invariant failed on live broker state."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BrokerConfig:
+    """Static service parameters (baked into the compiled decider)."""
+
+    n_agents: int
+    artifacts: tuple
+    artifact_tokens: int = 4096
+    strategy: str = "lazy"
+    access_k: int = 8
+    max_stale_steps: int = 0       # 0 disables K-staleness enforcement
+    batch_window: float = 0.0      # extra coalescing wait (s); 0 = one
+                                   # event-loop pass
+    max_batch: int = 0             # 0 = up to n_agents requests
+    backend: str = "auto"          # decision route: auto | scan | pallas
+    check_invariants: bool = True
+    #: audit-trace capture.  The trace grows one StepRecord per batch,
+    #: so indefinitely-running deployments (the TCP frontend) disable
+    #: it; bounded load runs keep it on for oracle replay.
+    capture_trace: bool = True
+    #: ring-buffer size for per-decision latency samples (stats
+    #: percentiles); bounds the broker's memory under open-ended load.
+    latency_window: int = 1 << 20
+
+    def __post_init__(self):
+        if self.strategy not in BROKER_STRATEGIES:
+            raise ValueError(
+                f"broker serves {BROKER_STRATEGIES}, got "
+                f"{self.strategy!r} (broadcast is the baseline, not a "
+                f"servable strategy; ttl is simulation-clock-only)")
+        if len(set(self.artifacts)) != len(self.artifacts):
+            raise ValueError("duplicate artifact ids")
+
+    def acs_config(self, n_steps: int = 1) -> acs.ACSConfig:
+        return acs.ACSConfig(
+            n_agents=self.n_agents, n_artifacts=len(self.artifacts),
+            artifact_tokens=self.artifact_tokens, n_steps=n_steps,
+            strategy=acs.STRATEGY_CODES[self.strategy],
+            access_k=self.access_k,
+            max_stale_steps=self.max_stale_steps)
+
+
+class ReadResult(NamedTuple):
+    content: tuple
+    version: int
+    hit: bool            # False = coherence fill (tokens were charged)
+    latency_s: float
+
+
+class WriteResult(NamedTuple):
+    version: int
+    latency_s: float
+
+
+@dataclasses.dataclass
+class _Request:
+    agent: int
+    artifact: int
+    is_write: bool
+    content: Optional[tuple]
+    future: asyncio.Future
+    t_submit: float
+
+
+class CoherenceBroker:
+    """The single-writer directory service.
+
+    Use as an async context manager::
+
+        async with CoherenceBroker(cfg) as broker:
+            await broker.read(agent=0, artifact="plan")
+    """
+
+    def __init__(self, config: BrokerConfig,
+                 contents: Optional[Dict[str, Sequence[int]]] = None
+                 ) -> None:
+        self.config = config
+        self.names = tuple(config.artifacts)
+        self._index = {a: d for d, a in enumerate(self.names)}
+        self.acs_config = config.acs_config()
+        self.decider = BatchDecider(self.acs_config, config.backend)
+        self.bus = EventBus()
+        self.store = ArtifactStore()
+        for name in self.names:
+            content = (contents or {}).get(
+                name, list(range(config.artifact_tokens)))
+            if len(content) != config.artifact_tokens:
+                raise ValueError(
+                    f"artifact {name!r} content length {len(content)} != "
+                    f"artifact_tokens {config.artifact_tokens} (the "
+                    f"broker's accounting is fixed-slot, like the "
+                    f"simulator's)")
+            self.store.put(name, list(content))
+        self.ledger = TokenLedger()
+        self.trace = ServiceTrace.for_broker(config)
+        self.latencies = collections.deque(maxlen=config.latency_window)
+        self.n_batches = 0
+        self._pending: list = []
+        self._wake = asyncio.Event()
+        self._flusher_task: Optional[asyncio.Task] = None
+        self._closed = False
+
+    # ------------------------------------------------------- lifecycle
+    async def start(self) -> "CoherenceBroker":
+        if self._flusher_task is None:
+            self._flusher_task = asyncio.get_running_loop().create_task(
+                self._flusher())
+        return self
+
+    async def stop(self) -> None:
+        self._closed = True
+        self._wake.set()
+        if self._flusher_task is not None:
+            await self._flusher_task
+            self._flusher_task = None
+
+    async def __aenter__(self) -> "CoherenceBroker":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # ------------------------------------------------------ client API
+    def artifact_index(self, artifact: str) -> int:
+        try:
+            return self._index[artifact]
+        except KeyError:
+            raise KeyError(
+                f"unknown artifact {artifact!r}; registered: "
+                f"{list(self.names)}") from None
+
+    async def read(self, agent: int, artifact: str) -> ReadResult:
+        """Consume an artifact: zero tokens when the agent's coherent
+        copy is valid, a full fetch otherwise."""
+        return await self._submit(agent, artifact, False, None)
+
+    async def write(self, agent: int, artifact: str,
+                    content: Optional[Sequence[int]] = None
+                    ) -> WriteResult:
+        """Read-modify-write through the authority (upgrade -> commit).
+        ``content=None`` commits a same-size revision of the current
+        canonical content (pointer-semantics update)."""
+        if content is not None:
+            content = tuple(content)
+            if len(content) != self.config.artifact_tokens:
+                raise ValueError(
+                    f"write of {len(content)} tokens to fixed "
+                    f"{self.config.artifact_tokens}-token artifact slot")
+        return await self._submit(agent, artifact, True, content)
+
+    def _submit(self, agent: int, artifact: str, is_write: bool,
+                content) -> asyncio.Future:
+        if self._closed:
+            raise RuntimeError("broker is stopped")
+        if not 0 <= agent < self.config.n_agents:
+            raise ValueError(f"agent {agent} outside [0, "
+                             f"{self.config.n_agents})")
+        if self._flusher_task is None:
+            raise RuntimeError("broker not started - use "
+                               "`async with CoherenceBroker(...)` or "
+                               "await broker.start()")
+        fut = asyncio.get_running_loop().create_future()
+        self._pending.append(_Request(
+            agent=agent, artifact=self.artifact_index(artifact),
+            is_write=is_write, content=content, future=fut,
+            t_submit=time.perf_counter()))
+        self._wake.set()
+        return fut
+
+    # --------------------------------------------------------- flusher
+    async def _flusher(self) -> None:
+        while True:
+            await self._wake.wait()
+            self._wake.clear()
+            if self._closed and not self._pending:
+                return
+            if self.config.batch_window > 0:
+                await asyncio.sleep(self.config.batch_window)
+            else:
+                # one event-loop pass: every already-scheduled client
+                # coroutine gets to enqueue before the batch is cut.
+                await asyncio.sleep(0)
+            while self._pending:
+                self._flush_once()
+                if self._pending:       # same-agent conflict spillover
+                    await asyncio.sleep(0)
+            if self._closed:
+                return
+
+    def _cut_batch(self) -> list:
+        """Drain pending FIFO into a micro-batch: at most one request
+        per agent (a batch is one serialized authority pass; a second
+        request from the same agent belongs to the next pass)."""
+        max_batch = self.config.max_batch or self.config.n_agents
+        batch, rest, seen = [], [], set()
+        for req in self._pending:
+            if req.agent in seen or len(batch) >= max_batch:
+                rest.append(req)
+            else:
+                seen.add(req.agent)
+                batch.append(req)
+        self._pending = rest
+        return batch
+
+    def _flush_once(self) -> None:
+        batch = self._cut_batch()
+        if not batch:
+            return
+        try:
+            self._decide_and_resolve(batch)
+        except Exception as e:       # noqa: BLE001 - fail the batch, not
+            for req in batch:        # the event loop
+                if not req.future.done():
+                    req.future.set_exception(e)
+
+    def _decide_and_resolve(self, batch: list) -> None:
+        n = self.config.n_agents
+        acts = np.zeros(n, bool)
+        arts = np.zeros(n, np.int32)
+        writes = np.zeros(n, bool)
+        for req in batch:
+            acts[req.agent] = True
+            arts[req.agent] = req.artifact
+            writes[req.agent] = req.is_write
+
+        ver_before = np.asarray(self.decider.arrays.version,
+                                np.int64).copy()
+        decision = self.decider.decide(acts, arts, writes)
+        ver_after = np.asarray(self.decider.arrays.version, np.int64)
+
+        if self.config.check_invariants:
+            self._check_invariants(batch, ver_before, ver_after)
+
+        # ledger: exact integer deltas from the decision engine
+        for field, delta in decision.ledger_delta.items():
+            setattr(self.ledger, field,
+                    getattr(self.ledger, field) + delta)
+
+        # content plane + responses, in the authority's agent order
+        now = time.perf_counter()
+        latencies = {}
+        for req in sorted(batch, key=lambda r: r.agent):
+            name = self.names[req.artifact]
+            version = int(decision.version[req.agent])
+            latency = now - req.t_submit
+            latencies[req.agent] = latency
+            self.latencies.append(latency)
+            if req.is_write:
+                content = (list(req.content) if req.content is not None
+                           else list(self.store.get(name)))
+                self.store.put(name, content)
+                self.bus.publish(Message(
+                    "VERSION_UPDATE", f"agent-{req.agent}", name,
+                    version, timestamp=now))
+                req.future.set_result(WriteResult(version, latency))
+            else:
+                req.future.set_result(ReadResult(
+                    tuple(self.store.get(name)), version,
+                    hit=not bool(decision.miss[req.agent]),
+                    latency_s=latency))
+        self.n_batches += 1
+        if self.config.capture_trace:
+            self.trace.append_step(acts, arts, writes, decision.miss,
+                                   decision.version, latencies)
+
+    # ------------------------------------------------------ invariants
+    def _check_invariants(self, batch, ver_before, ver_after) -> None:
+        state = np.asarray(self.decider.arrays.state)
+        if not invariants.single_writer(state):
+            raise InvariantViolation(
+                f"SWMR violated: two M holders\n{state}")
+        if not invariants.exclusive_means_alone(state):
+            raise InvariantViolation(
+                f"exclusivity violated\n{state}")
+        if (state >= _E).any():
+            raise InvariantViolation(
+                f"E/M persisted past a committed batch\n{state}")
+        if not invariants.monotonic_version(ver_before, ver_after):
+            raise InvariantViolation(
+                f"version regressed: {ver_before} -> {ver_after}")
+        bumps = np.zeros(len(self.names), np.int64)
+        for req in batch:
+            if req.is_write:
+                bumps[req.artifact] += 1
+        if not np.array_equal(ver_after - ver_before, bumps):
+            raise InvariantViolation(
+                f"version bump mismatch: delta {ver_after - ver_before}"
+                f" vs writes {bumps}")
+        if self.config.max_stale_steps > 0:
+            consumed = int(self.decider.metrics.max_consumed_staleness)
+            if consumed > self.config.max_stale_steps:
+                raise InvariantViolation(
+                    f"K-staleness violated: served a hit "
+                    f"{consumed} action-steps stale "
+                    f"(K={self.config.max_stale_steps})")
+
+    # ----------------------------------------------------------- stats
+    @property
+    def directory_state(self) -> np.ndarray:
+        """(n_agents, n_artifacts) MESI matrix (live view)."""
+        return np.asarray(self.decider.arrays.state, np.int32)
+
+    @property
+    def versions(self) -> np.ndarray:
+        return np.asarray(self.decider.arrays.version, np.int32)
+
+    def stats(self) -> dict:
+        lat = np.asarray(self.latencies) if self.latencies else \
+            np.zeros(1)
+        led = self.ledger
+        return {
+            "strategy": self.config.strategy,
+            "backend": self.decider.backend,
+            "n_actions": led.n_reads + led.n_writes,
+            "n_batches": self.n_batches,
+            "mean_batch": ((led.n_reads + led.n_writes)
+                           / max(self.n_batches, 1)),
+            "total_tokens": led.total_tokens,
+            "fetch_tokens": led.fetch_tokens,
+            "signal_tokens": led.signal_tokens,
+            "push_tokens": led.push_tokens,
+            "n_fetches": led.n_fetches,
+            "n_hits": led.n_hits,
+            "cache_hit_rate": led.n_hits / max(led.n_hits
+                                               + led.n_fetches, 1),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        }

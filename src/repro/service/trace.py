@@ -1,0 +1,180 @@
+"""Oracle-replayable action traces of the live coherence service.
+
+Every micro-batch the broker commits is one *serialized authority
+pass* - exactly the shape of one simulator tick.  Recording the batch
+stream as a ``(n_batches, n_agents)`` action matrix therefore yields a
+trace in the four-way differential oracle's native format
+(``repro.sim.oracle.Trace``): batches map to steps, and within a batch
+agents are processed ascending, which is both the broker's and the
+kernel's serialization order.
+
+``verify_broker`` closes the live-service <-> conformance loop: the
+captured trace is replayed through the message-level protocol, the
+vectorized ACS, the Pallas MESI kernel and (for lazy) the model
+checker's transition relation, then the agreed-upon ledger / MESI
+states / versions are compared **bit-for-bit** against what the live
+broker actually charged and holds.  Any scheduling bug, lost update or
+double-charge in the async layer shows up as a ConformanceError.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import numpy as np
+
+from repro.core import acs
+
+
+@dataclasses.dataclass
+class StepRecord:
+    """One committed micro-batch (one serialized authority pass)."""
+
+    agents: tuple        # acting agent ids, ascending
+    arts: tuple          # artifact index per acting agent
+    writes: tuple        # bool per acting agent
+    miss: tuple          # bool per acting agent (coherence fill)
+    version: tuple       # served version per acting agent
+    latency_s: tuple     # decision latency per acting agent
+
+
+@dataclasses.dataclass
+class ServiceTrace:
+    """Append-only audit log of every decision the broker made."""
+
+    n_agents: int
+    n_artifacts: int
+    artifact_tokens: int
+    strategy: str
+    access_k: int
+    max_stale_steps: int
+    steps: list = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def for_broker(cls, config) -> "ServiceTrace":
+        return cls(n_agents=config.n_agents,
+                   n_artifacts=len(config.artifacts),
+                   artifact_tokens=config.artifact_tokens,
+                   strategy=config.strategy,
+                   access_k=config.access_k,
+                   max_stale_steps=config.max_stale_steps)
+
+    # -------------------------------------------------------- capture
+    def append_step(self, acts, arts, writes, miss, version,
+                    latencies: Optional[dict] = None) -> None:
+        agents = tuple(int(a) for a in np.flatnonzero(np.asarray(acts)))
+        self.steps.append(StepRecord(
+            agents=agents,
+            arts=tuple(int(arts[a]) for a in agents),
+            writes=tuple(bool(writes[a]) for a in agents),
+            miss=tuple(bool(miss[a]) for a in agents),
+            version=tuple(int(version[a]) for a in agents),
+            latency_s=tuple(float((latencies or {}).get(a, 0.0))
+                            for a in agents)))
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.steps)
+
+    @property
+    def n_actions(self) -> int:
+        return sum(len(s.agents) for s in self.steps)
+
+    # ------------------------------------------------- oracle interface
+    def acs_config(self) -> acs.ACSConfig:
+        return acs.ACSConfig(
+            n_agents=self.n_agents, n_artifacts=self.n_artifacts,
+            artifact_tokens=self.artifact_tokens,
+            n_steps=max(self.n_steps, 1),
+            strategy=acs.STRATEGY_CODES[self.strategy],
+            access_k=self.access_k,
+            max_stale_steps=self.max_stale_steps)
+
+    def to_oracle_trace(self):
+        """The captured batch stream as a ``sim.oracle.Trace`` (batches
+        = steps; agent order within a batch is the serialization
+        order both executions share)."""
+        from repro.sim import oracle
+        T = max(self.n_steps, 1)
+        acts = np.zeros((T, self.n_agents), bool)
+        arts = np.zeros((T, self.n_agents), np.int32)
+        writes = np.zeros((T, self.n_agents), bool)
+        for s, rec in enumerate(self.steps):
+            for a, d, w in zip(rec.agents, rec.arts, rec.writes):
+                acts[s, a] = True
+                arts[s, a] = d
+                writes[s, a] = w
+        return oracle.Trace(acts=acts, arts=arts, writes=writes)
+
+    # --------------------------------------------------- serialization
+    def to_json(self) -> str:
+        payload = dataclasses.asdict(self)
+        payload["schema_version"] = 1
+        return json.dumps(payload, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ServiceTrace":
+        payload = json.loads(text)
+        payload.pop("schema_version", None)
+        steps = [StepRecord(**{k: tuple(v) for k, v in s.items()})
+                 for s in payload.pop("steps")]
+        return cls(steps=steps, **payload)
+
+
+# ---------------------------------------------------------------------------
+# The live-service <-> conformance loop.
+
+
+def replay_trace(trace: ServiceTrace, name: str = "service"):
+    """Replay a captured service trace through the four-way oracle.
+
+    Returns the agreed-upon ``DiffReport``; raises ``ConformanceError``
+    if any two implementations disagree on the trace."""
+    from repro.sim import oracle
+    return oracle.check_trace(trace.acs_config(),
+                              trace.to_oracle_trace(), name=name)
+
+
+def verify_broker(broker, name: str = "service"):
+    """Replay the broker's own captured trace through the oracle and
+    assert the *live* ledger, MESI directory and versions match the
+    replay bit-for-bit.  The acceptance surface for the async layer:
+    batching, interleaving and dispatch may reorder concurrent
+    requests, but the serialized history the broker committed must be
+    exactly executable - and exactly charged - under all four
+    reference implementations."""
+    from repro.sim import oracle
+    if not broker.config.capture_trace:
+        raise ValueError(
+            "broker was started with capture_trace=False (unbounded "
+            "deployments); oracle verification needs the audit trace")
+    if broker.n_batches != broker.trace.n_steps:
+        raise ValueError(
+            f"trace has {broker.trace.n_steps} steps but the broker "
+            f"committed {broker.n_batches} batches - partial capture "
+            f"cannot be verified")
+    report = replay_trace(broker.trace, name=name)
+    led = broker.ledger
+    for field in dataclasses.fields(oracle.Ledger):
+        live = int(getattr(led, field.name))
+        replayed = int(getattr(report.ledger, field.name))
+        if live != replayed:
+            raise oracle.ConformanceError(
+                f"live broker ledger.{field.name} = {live} but oracle "
+                f"replay charged {replayed}")
+    if not np.array_equal(broker.directory_state, report.state):
+        raise oracle.ConformanceError(
+            f"live MESI directory diverged from replay:\n"
+            f"live:\n{broker.directory_state}\nreplay:\n{report.state}")
+    if not np.array_equal(broker.versions, report.version):
+        raise oracle.ConformanceError(
+            f"live versions diverged from replay: {broker.versions} "
+            f"vs {report.version}")
+    sync = np.asarray(broker.decider.arrays.last_sync, np.int32)
+    if not np.array_equal(sync, report.last_sync):
+        raise oracle.ConformanceError(
+            f"live last_sync diverged from replay:\n{sync}\n"
+            f"vs\n{report.last_sync}")
+    return report

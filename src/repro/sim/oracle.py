@@ -339,18 +339,20 @@ def _expect(label: str, got, want, context: str) -> None:
             f"{context}: {label} mismatch\n  got:  {got}\n  want: {want}")
 
 
-def differential_check(workload, run: int = 0,
-                       strategies=None) -> DiffReport:
-    """Replay one sampled trace of ``workload`` through every
-    implementation and assert bit-exact agreement.
+def check_trace(cfg: acs.ACSConfig, trace: Trace, *,
+                name: str = "trace", context: str | None = None
+                ) -> DiffReport:
+    """Replay a *given* action trace through every implementation and
+    assert bit-exact agreement.
 
-    ``workload``: a ``repro.sim.workloads.Workload`` (heterogeneous
-    rates) or a ``ScenarioConfig``-like object with ``.acs`` and
-    ``.seed`` (scalar rates).  ``run`` selects the engine grid cell the
-    trace reproduces.  Returns the agreed-upon :class:`DiffReport`;
-    raises :class:`ConformanceError` on any divergence.
+    This is the trace-level core of :func:`differential_check`, exposed
+    so traces captured from the **live coherence service**
+    (``repro.service.trace``) replay through the identical four-way
+    harness - the trace need not come from the engine's PRNG schedule.
+    ``cfg.n_steps`` must equal ``trace.acts.shape[0]``.  Returns the
+    agreed-upon :class:`DiffReport`; raises :class:`ConformanceError`
+    on any divergence.
     """
-    cfg = workload.acs
     if cfg.strategy not in DIFFERENTIAL_STRATEGIES:
         raise ValueError(
             f"differential harness covers "
@@ -360,15 +362,16 @@ def differential_check(workload, run: int = 0,
         raise ValueError("K-staleness revalidation is scan-path only; "
                          "run the differential check with "
                          "max_stale_steps=0")
-    rates = workload.rates() if hasattr(workload, "rates") else None
-    key = episode_key(workload.seed, run)
-    trace = sample_trace(cfg, key, rates)
+    if trace.acts.shape != (cfg.n_steps, cfg.n_agents):
+        raise ValueError(
+            f"trace shape {trace.acts.shape} does not match config "
+            f"({cfg.n_steps} steps x {cfg.n_agents} agents)")
+    ctx = context or f"trace {name!r}"
 
     led_vec, st_vec, ver_vec, sync_vec = replay_vectorized(cfg, trace)
     led_pro, st_pro, ver_pro, sync_pro = replay_protocol(cfg, trace)
     led_pal, st_pal, ver_pal, sync_pal = replay_pallas(cfg, trace)
 
-    ctx = f"workload {workload.name!r} run {run}"
     for field in dataclasses.fields(Ledger):
         _expect(f"ledger.{field.name} (protocol vs vectorized)",
                 getattr(led_pro, field.name),
@@ -397,6 +400,32 @@ def differential_check(workload, run: int = 0,
                 sync_vec, ctx)
         implementations.append("model_check")
 
+    return DiffReport(
+        workload=name,
+        strategy=acs.STRATEGY_NAMES[cfg.strategy],
+        trace=trace, ledger=led_vec, state=st_vec, version=ver_vec,
+        last_sync=sync_vec, implementations=tuple(implementations))
+
+
+def differential_check(workload, run: int = 0,
+                       strategies=None) -> DiffReport:
+    """Replay one sampled trace of ``workload`` through every
+    implementation and assert bit-exact agreement.
+
+    ``workload``: a ``repro.sim.workloads.Workload`` (heterogeneous
+    rates) or a ``ScenarioConfig``-like object with ``.acs`` and
+    ``.seed`` (scalar rates).  ``run`` selects the engine grid cell the
+    trace reproduces.  Returns the agreed-upon :class:`DiffReport`;
+    raises :class:`ConformanceError` on any divergence.
+    """
+    cfg = workload.acs
+    rates = workload.rates() if hasattr(workload, "rates") else None
+    key = episode_key(workload.seed, run)
+    trace = sample_trace(cfg, key, rates)
+    ctx = f"workload {workload.name!r} run {run}"
+    report = check_trace(cfg, trace, name=workload.name, context=ctx)
+    led_vec = report.ledger
+
     # Close the loop: the fused tensor path executes this very trace.
     met = acs.run_episode(cfg, key, rates=rates)
     _expect("run_episode fetch_tokens vs replay",
@@ -407,10 +436,6 @@ def differential_check(workload, run: int = 0,
             int(met.push_tokens), led_vec.push_tokens, ctx)
     _expect("run_episode n_hits vs replay",
             int(met.n_hits), led_vec.n_hits, ctx)
-    implementations.append("run_episode")
-
-    return DiffReport(
-        workload=workload.name,
-        strategy=acs.STRATEGY_NAMES[cfg.strategy],
-        trace=trace, ledger=led_vec, state=st_vec, version=ver_vec,
-        last_sync=sync_vec, implementations=tuple(implementations))
+    return dataclasses.replace(
+        report,
+        implementations=report.implementations + ("run_episode",))
