@@ -1,0 +1,216 @@
+"""Content-plane benchmark: delta coherence bytes-on-wire across
+chunk size x write-locality x volatility x the six workload families.
+
+Every (family, locality, volatility) cell of a given chunk size shares
+one static signature, so the whole slab - broadcast baseline included -
+runs as ONE compiled ``(variant x workload x run)`` XLA program with
+the rate matrices AND the write-locality scalars as traced axes
+(``engine.compare_workloads``); the compile count is asserted via
+``engine.trace_counter`` (one compilation per chunk size, zero
+steady-state retraces).
+
+Three byte columns per cell:
+
+  * ``broadcast_bytes``  - per-step full rebroadcast (the paper's
+    baseline, in wire bytes);
+  * ``full_bytes``       - whole-artifact lazy: the SAME miss sequence
+    as delta coherence, shipping the whole artifact per fill;
+  * ``delta_bytes``      - chunk-granular delta coherence: only chunks
+    whose authority version moved past the reader's chunk vector ship.
+
+The acceptance surface: ``delta < full < broadcast`` (strict) on every
+cell of the full grid - delta coherence must strictly dominate
+whole-artifact lazy for all six families at V in {0.05, 0.10, 0.25,
+0.50}.  Writes ``BENCH_content.json`` at the repo root (schema in
+``benchmarks/README.md``), gated by ``scripts/bench_gate.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+from benchmarks.common import (BenchRow, bench_points, bench_runs,
+                               bench_steps, fast_mode, fmt_pct, md_table,
+                               write_results)
+from repro.sim import engine, workloads
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_JSON = REPO_ROOT / "BENCH_content.json"
+
+#: the measured grid (fast mode shrinks runs/steps and thins the
+#: chunk/locality axes, never the families or the volatility points -
+#: the acceptance criterion needs all of both).
+N_AGENTS = 8
+N_ARTIFACTS = 6
+N_RUNS = 10
+N_STEPS = 40
+ARTIFACT_TOKENS = 4096
+CHUNK_TOKENS = (256, 512, 1024)
+LOCALITIES = (0.1, 0.25, 0.5)
+VOLATILITIES = (0.05, 0.10, 0.25, 0.50)
+FAMILIES = tuple(workloads.FAMILIES)
+
+
+def _grid_workloads(chunk_tokens: int, localities, volatilities):
+    """Every (family x locality x volatility) cell at one chunk size -
+    one static signature, one compilation."""
+    cells = []
+    for family in FAMILIES:
+        base = workloads.make(
+            family, n_agents=N_AGENTS, n_artifacts=N_ARTIFACTS,
+            n_runs=bench_runs(N_RUNS), artifact_tokens=ARTIFACT_TOKENS,
+            n_steps=bench_steps(N_STEPS), chunk_tokens=chunk_tokens)
+        for loc in localities:
+            for v in volatilities:
+                cells.append((family, loc, v,
+                              base.with_volatility(v)
+                                  .with_locality(loc)))
+    return cells
+
+
+def run() -> list[BenchRow]:
+    chunk_axis = bench_points(CHUNK_TOKENS)
+    loc_axis = bench_points(LOCALITIES)
+    rows_payload = []
+    compilations = []
+    sims_per_s = None
+
+    for ct in chunk_axis:
+        cells = _grid_workloads(ct, loc_axis, VOLATILITIES)
+        zoo = [w for _, _, _, w in cells]
+        n_episodes = len(zoo) * 2 * zoo[0].n_runs
+        with engine.trace_counter() as tc:
+            t0 = time.perf_counter()
+            cmps = engine.compare_workloads(zoo)
+            cold_s = time.perf_counter() - t0
+            n_compiles = tc.count
+            t0 = time.perf_counter()
+            cmps = engine.compare_workloads(zoo)
+            steady_s = time.perf_counter() - t0
+            recompiles = tc.count - n_compiles
+        compilations.append({"chunk_tokens": ct,
+                             "compilations": n_compiles,
+                             "recompilations_steady": recompiles,
+                             "cold_s": cold_s, "steady_s": steady_s})
+        sims_per_s = n_episodes / steady_s
+        for (family, loc, v, w), cmp_ in zip(cells, cmps):
+            co, bc = cmp_.coherent, cmp_.broadcast
+            rows_payload.append({
+                "family": family,
+                "chunk_tokens": ct,
+                "write_locality": loc,
+                "volatility": v,
+                "effective_volatility": w.effective_volatility(),
+                "broadcast_bytes": bc.delta_bytes_mean,
+                "full_bytes": co.full_bytes_mean,
+                "delta_bytes": co.delta_bytes_mean,
+                "n_chunks_fetched": co.n_chunks_fetched_mean,
+                "savings_vs_full": 1.0 - (co.delta_bytes_mean
+                                          / co.full_bytes_mean),
+                "savings_vs_broadcast": 1.0 - (co.delta_bytes_mean
+                                               / bc.delta_bytes_mean),
+                "strictly_dominates": bool(
+                    co.delta_bytes_mean < co.full_bytes_mean
+                    < bc.delta_bytes_mean),
+            })
+
+    violations = [r for r in rows_payload if not r["strictly_dominates"]]
+    if violations:
+        raise AssertionError(
+            f"delta coherence failed strict dominance on "
+            f"{len(violations)} cell(s), e.g. {violations[0]}")
+
+    per_family = {}
+    for fam in FAMILIES:
+        cells = [r for r in rows_payload if r["family"] == fam]
+        per_family[fam] = {
+            "min_savings_vs_full": min(r["savings_vs_full"]
+                                       for r in cells),
+            "mean_savings_vs_full": sum(r["savings_vs_full"]
+                                        for r in cells) / len(cells),
+            "min_savings_vs_broadcast": min(r["savings_vs_broadcast"]
+                                            for r in cells),
+            "n_cells": len(cells),
+        }
+
+    payload = {
+        "schema_version": 1,
+        "fast_mode": fast_mode(),
+        "backend": jax.default_backend(),
+        "devices": engine.shard_plan(
+            len(FAMILIES) * len(loc_axis) * len(VOLATILITIES),
+            bench_runs(N_RUNS)).devices,
+        "grid": {
+            "families": list(FAMILIES),
+            "chunk_tokens": list(chunk_axis),
+            "write_localities": list(loc_axis),
+            "volatilities": list(VOLATILITIES),
+            "n_agents": N_AGENTS,
+            "n_artifacts": N_ARTIFACTS,
+            "n_runs": bench_runs(N_RUNS),
+            "n_steps": bench_steps(N_STEPS),
+            "artifact_tokens": ARTIFACT_TOKENS,
+            "strategy": "lazy",
+        },
+        "compilations": compilations,
+        "sims_per_s": sims_per_s,
+        "per_family": per_family,
+        "cells": rows_payload,
+        "acceptance": {
+            "strict_dominance_all_cells": True,
+            "n_cells": len(rows_payload),
+        },
+    }
+    if not fast_mode():
+        # repo-root artifact = cross-PR trajectory; smoke runs (shrunk
+        # grid, opt-level-0 compiles) must not clobber it.
+        BENCH_JSON.write_text(json.dumps(payload, indent=2,
+                                         default=float))
+
+    mid_ct = chunk_axis[len(chunk_axis) // 2]
+    table = []
+    for fam in FAMILIES:
+        cells = [r for r in rows_payload
+                 if r["family"] == fam and r["chunk_tokens"] == mid_ct]
+        best = max(cells, key=lambda r: r["savings_vs_full"])
+        worst = min(cells, key=lambda r: r["savings_vs_full"])
+        table.append([
+            fam, f"{mid_ct}",
+            fmt_pct(per_family[fam]["min_savings_vs_full"]),
+            fmt_pct(best["savings_vs_full"]),
+            f"loc={worst['write_locality']} V={worst['volatility']}",
+            fmt_pct(per_family[fam]["min_savings_vs_broadcast"]),
+        ])
+    md = ("### Content plane - delta coherence bytes-on-wire\n\n"
+          + md_table(["family", "chunk", "min sav vs full",
+                      "best sav vs full", "worst cell",
+                      "min sav vs broadcast"], table)
+          + f"\nGrid: {len(rows_payload)} cells "
+          f"({len(chunk_axis)} chunk sizes x {len(loc_axis)} "
+          f"localities x {len(VOLATILITIES)} volatilities x "
+          f"{len(FAMILIES)} families), one compilation per chunk size "
+          f"({[c['compilations'] for c in compilations]}), "
+          f"{sims_per_s:,.0f} sims/s steady.  Strict dominance "
+          f"delta < full < broadcast holds on every cell.\n")
+
+    rows = [BenchRow(
+        name=f"content/{fam}",
+        us_per_call=0.0,
+        derived=f"min_savings_vs_full="
+                f"{per_family[fam]['min_savings_vs_full'] * 100:.1f}%")
+        for fam in FAMILIES]
+    rows.append(BenchRow(
+        name="content/engine", us_per_call=0.0,
+        derived=f"cells={len(rows_payload)} "
+                f"compiles={[c['compilations'] for c in compilations]}"))
+    write_results("content_plane", rows, md, extra=payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

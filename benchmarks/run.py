@@ -33,6 +33,7 @@ MODULES = {
     "table5_step_scaling": "table5",
     "volatility_cliff": "cliff",
     "workload_zoo": "zoo",
+    "content_plane": "content",
     "pointer_semantics": "pointer",
     "prompt_cache_amplification": "promptcache",
     "staleness_tradeoff": "staleness",

@@ -52,18 +52,21 @@ BASELINES = {
     "sweep": REPO_ROOT / "BENCH_sweep.json",
     "zoo": REPO_ROOT / "BENCH_workloads.json",
     "service": REPO_ROOT / "BENCH_service.json",
+    "content": REPO_ROOT / "BENCH_content.json",
 }
 #: benchmarks/results payload file per baseline key
 RESULT_FILES = {
     "sweep": "sweep_engine.json",
     "zoo": "workload_zoo.json",
     "service": "service_bench.json",
+    "content": "content_plane.json",
 }
 #: fresh fast-mode payloads written for CI artifact upload
 FRESH_OUT = {
     "sweep": RESULTS_DIR / "BENCH_sweep.fresh.json",
     "zoo": RESULTS_DIR / "BENCH_workloads.fresh.json",
     "service": RESULTS_DIR / "BENCH_service.fresh.json",
+    "content": RESULTS_DIR / "BENCH_content.fresh.json",
 }
 
 
@@ -93,11 +96,12 @@ def _run_benches() -> dict:
     exactly the BENCH payload)."""
     sys.path.insert(0, str(REPO_ROOT))
     sys.path.insert(0, str(REPO_ROOT / "src"))
-    from benchmarks import (service_bench, sweep_engine,  # noqa: E402
-                            workload_zoo)
+    from benchmarks import (content_plane, service_bench,  # noqa: E402
+                            sweep_engine, workload_zoo)
     sweep_engine.run()
     workload_zoo.run()
     service_bench.run()
+    content_plane.run()
     fresh = {
         name: json.loads(
             (RESULTS_DIR / fname).read_text())["extra"]
@@ -111,7 +115,7 @@ def _run_benches() -> dict:
 
 
 def _inject(fresh: dict, throughput_pct: float, savings_drift: float,
-            latency_factor: float) -> dict:
+            latency_factor: float, bytes_pct: float = 0.0) -> dict:
     """Apply a synthetic regression to the fresh payloads (gate
     self-test: the comparator must flag it)."""
     f = json.loads(json.dumps(fresh, default=float))  # deep copy
@@ -127,6 +131,26 @@ def _inject(fresh: dict, throughput_pct: float, savings_drift: float,
         fam["p50_ms"] *= latency_factor
         fam["p99_ms"] *= latency_factor
     f["service"]["acceptance"]["savings"] -= savings_drift
+    if bytes_pct:
+        # bloat every cell's shipped delta bytes and recompute the
+        # derived columns - savings floors and (for a large enough
+        # bloat) strict dominance must go red
+        for cell in f["content"]["cells"]:
+            cell["delta_bytes"] *= (1.0 + bytes_pct)
+            cell["savings_vs_full"] = 1.0 - (cell["delta_bytes"]
+                                             / cell["full_bytes"])
+            cell["savings_vs_broadcast"] = 1.0 - (
+                cell["delta_bytes"] / cell["broadcast_bytes"])
+            cell["strictly_dominates"] = bool(
+                cell["delta_bytes"] < cell["full_bytes"]
+                < cell["broadcast_bytes"])
+        for fam, agg in f["content"]["per_family"].items():
+            cells = [c for c in f["content"]["cells"]
+                     if c["family"] == fam]
+            agg["min_savings_vs_full"] = min(c["savings_vs_full"]
+                                             for c in cells)
+            agg["min_savings_vs_broadcast"] = min(
+                c["savings_vs_broadcast"] for c in cells)
     return f
 
 
@@ -257,6 +281,54 @@ def run_gate(fresh: dict, base: dict, args) -> int:
                    f"{fam['throughput_dps']:.1f} >= {floor:.1f} "
                    f"(sanity floor)")
 
+    # --- content plane: delta coherence byte savings
+    fc, bc = fresh["content"], base["content"]
+    print(f"[content]  delta < full < broadcast on every cell; "
+          + (f"min per-family savings-vs-full tol ±{savings_tol:.3f} "
+             f"abs" if same_mode else
+             "cross-mode: per-family min savings must stay positive "
+             "(fast grids have 4x fewer steps, so re-fetch counts - "
+             "and with them the savings magnitude - are not "
+             "comparable across modes)"))
+    f_cfams = fc["grid"]["families"]
+    b_cfams = bc["grid"]["families"]
+    gate.check(f_cfams == b_cfams, "content.families",
+               f"{f_cfams} vs {b_cfams}")
+    bad = [c for c in fc["cells"]
+           if not (c["delta_bytes"] < c["full_bytes"]
+                   < c["broadcast_bytes"])]
+    gate.check(not bad, "content.strict_dominance",
+               f"{len(bad)} of {len(fc['cells'])} cells violate "
+               f"delta < full < broadcast"
+               + (f" (e.g. {bad[0]['family']} chunk="
+                  f"{bad[0]['chunk_tokens']} loc="
+                  f"{bad[0]['write_locality']} V={bad[0]['volatility']})"
+                  if bad else ""))
+    gate.check(all(c["compilations"] == 1
+                   and c["recompilations_steady"] == 0
+                   for c in fc["compilations"]),
+               "content.compilations",
+               f"one compilation per chunk size, zero steady retraces: "
+               f"{fc['compilations']}")
+    for fam, b_agg in bc["per_family"].items():
+        f_agg = fc["per_family"].get(fam)
+        if f_agg is None:
+            continue
+        if same_mode:
+            delta = (f_agg["min_savings_vs_full"]
+                     - b_agg["min_savings_vs_full"])
+            gate.check(delta >= -args.savings_tol,
+                       f"content.savings_vs_full[{fam}]",
+                       f"{f_agg['min_savings_vs_full']:.4f} vs "
+                       f"baseline {b_agg['min_savings_vs_full']:.4f} "
+                       f"(delta {delta:+.4f})")
+        else:
+            gate.check(f_agg["min_savings_vs_full"] > 0,
+                       f"content.savings_vs_full[{fam}]",
+                       f"{f_agg['min_savings_vs_full']:.4f} > 0 "
+                       f"(cross-mode positivity floor; baseline full "
+                       f"grid: {b_agg['min_savings_vs_full']:.4f})")
+
     if gate.failures:
         print(f"\nbench-gate: RED - {len(gate.failures)} check(s) "
               f"failed:")
@@ -294,6 +366,11 @@ def main(argv=None) -> int:
                     help="multiply fresh service p50/p99 by FACTOR "
                     "before comparing - the gate must go red "
                     "(self-test; use FACTOR > --latency-factor)")
+    ap.add_argument("--inject-bytes-regression", type=float,
+                    default=0.0, metavar="PCT",
+                    help="bloat every content-plane cell's delta_bytes "
+                    "by (1+PCT) and recompute savings/dominance - the "
+                    "gate must go red (self-test)")
     ap.add_argument("--savings-tol", type=float, default=0.005,
                     help="same-grid per-family savings tolerance, "
                     "absolute (default 0.005 - savings are "
@@ -343,14 +420,17 @@ def main(argv=None) -> int:
         fresh = _run_benches()
 
     if (args.inject_throughput_regression or args.inject_savings_drift
-            or args.inject_latency_regression != 1.0):
+            or args.inject_latency_regression != 1.0
+            or args.inject_bytes_regression):
         print(f"bench-gate: INJECTING synthetic regression "
               f"(throughput -{args.inject_throughput_regression:.0%}, "
               f"savings -{args.inject_savings_drift}, "
-              f"latency x{args.inject_latency_regression:.1f})")
+              f"latency x{args.inject_latency_regression:.1f}, "
+              f"delta bytes +{args.inject_bytes_regression:.0%})")
         fresh = _inject(fresh, args.inject_throughput_regression,
                         args.inject_savings_drift,
-                        args.inject_latency_regression)
+                        args.inject_latency_regression,
+                        args.inject_bytes_regression)
 
     return run_gate(fresh, base, args)
 

@@ -5,9 +5,9 @@
 #   - fails if cache dirs (__pycache__ / .pytest_cache / .hypothesis)
 #     ever become git-tracked
 #   - runs the full pytest suite (tier-1 verify from ROADMAP.md)
-#   - runs the sweep-engine + table + coherence-service benches in
-#     REPRO_BENCH_FAST mode (shrunk n_runs/n_steps/rounds; completes
-#     in well under a minute)
+#   - runs the sweep-engine + table + coherence-service + content-plane
+#     benches in REPRO_BENCH_FAST mode (shrunk n_runs/n_steps/rounds;
+#     completes in well under a minute)
 #   - replays the committed BENCH baselines through the perf gate
 #     (plumbing check; CI's bench-gate job does the fresh-run gating)
 set -euo pipefail
@@ -16,7 +16,10 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== repo hygiene =="
-tracked_caches=$(git ls-files | grep -E '(^|/)(__pycache__|\.pytest_cache|\.hypothesis|\.mypy_cache|\.ruff_cache|[^/]*\.egg-info)(/|$)' || true)
+# covers every directory, benchmarks/ and tests/ included; the second
+# alternative catches stray compiled files OUTSIDE a __pycache__ dir,
+# which the directory pattern alone misses
+tracked_caches=$(git ls-files | grep -E '(^|/)(__pycache__|\.pytest_cache|\.hypothesis|\.mypy_cache|\.ruff_cache|[^/]*\.egg-info)(/|$)|\.py[co]$' || true)
 if [ -n "$tracked_caches" ]; then
   echo "ERROR: cache artifacts are git-tracked (extend .gitignore and \`git rm -r --cached\` them):"
   echo "$tracked_caches"
@@ -30,7 +33,7 @@ python -m pytest -x -q
 
 echo
 echo "== smoke benches (REPRO_BENCH_FAST=1) =="
-REPRO_BENCH_FAST=1 python -m benchmarks.run sweep table1 table2 cliff zoo service
+REPRO_BENCH_FAST=1 python -m benchmarks.run sweep table1 table2 cliff zoo service content
 
 echo
 echo "== bench gate (baseline replay) =="

@@ -1,0 +1,18 @@
+"""Chunk-granular content plane: delta coherence below MESI's
+whole-artifact granularity.
+
+Geometry + host-side content-addressed store live in
+:mod:`repro.content.chunks`; the vectorized per-chunk version/dirty
+state machine is threaded through ``repro.core.acs`` (scan path) and
+``repro.kernels.chunk_diff`` (batched Pallas kernel); the byte-exact
+differential harness is ``repro.sim.oracle.check_content_trace``.
+"""
+
+from repro.content.chunks import (BYTES_PER_TOKEN, ChunkStore,
+                                  apply_delta, chunk_digest, chunk_sizes,
+                                  n_chunks, reassemble, split_chunks)
+
+__all__ = [
+    "BYTES_PER_TOKEN", "ChunkStore", "apply_delta", "chunk_digest",
+    "chunk_sizes", "n_chunks", "reassemble", "split_chunks",
+]

@@ -26,6 +26,15 @@ The same semantics are implemented as a Pallas TPU kernel in
 ``repro.kernels.mesi_transition`` (batched over simulations) and as a
 message-level protocol in ``repro.core.protocol``; tests assert all three
 agree.
+
+With ``chunk_tokens > 0`` the chunk-granular content plane
+(``repro.content``) rides alongside: per-chunk version counters at the
+authority, a per-(agent, artifact) chunk sync vector that survives MESI
+invalidation, writes dirtying only a sampled locality span, and fills
+shipping only stale chunks.  It is a bytes-on-wire *accounting overlay*
+- no token counter moves - mirrored bit-exactly by
+``repro.kernels.chunk_diff`` and pinned by the byte-exact oracle leg
+(``repro.sim.oracle.check_content_trace``).
 """
 
 from __future__ import annotations
@@ -36,6 +45,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.content.chunks import BYTES_PER_TOKEN, chunk_sizes, n_chunks
 from repro.core.states import MESIState
 
 # Strategy codes (static Python ints baked into jitted closures).
@@ -77,6 +87,17 @@ class ACSConfig:
     ttl_events: int = 10             # TTL lease, in logical action-events
     access_k: int = 8                # access-count expiry threshold
     max_stale_steps: int = 0         # 0 disables K-staleness enforcement
+    #: chunk-granular content plane (``repro.content``): artifacts are
+    #: arrays of ``chunk_tokens``-token chunks with per-chunk version
+    #: counters, misses fetch only stale chunks (delta coherence), and
+    #: the metrics grow a bytes-on-wire ledger.  0 disables the plane -
+    #: the disabled program is byte-identical to the pre-content code.
+    chunk_tokens: int = 0
+    #: fraction of an artifact's chunks one write dirties (a circular
+    #: chunk span; sampled per write).  Default 1.0 = whole-artifact
+    #: writes.  A *traced* sweep axis of the fused engine, like
+    #: ``volatility`` - this field is only the default.
+    write_locality: float = 1.0
 
 
 class RateMatrices(NamedTuple):
@@ -148,8 +169,64 @@ def draw_actions(key: jax.Array, n_agents: int, n_artifacts: int,
     return acts, arts.astype(jnp.int32), writes
 
 
+#: strategies the chunk content plane is defined for: write-invalidate,
+#: fetch-on-demand.  Eager push and TTL/broadcast bulk injection ship
+#: whole artifacts by construction; delta coherence is the lazy-fetch
+#: optimization (paper SS5.5 recommends lazy).
+CONTENT_STRATEGIES = (LAZY, ACCESS_COUNT)
+
+#: ``fold_in`` constant deriving the write-span key from a step key.
+#: Folding (instead of widening the existing 3-way split) leaves the
+#: act/artifact/write streams - and every committed golden ledger -
+#: untouched when the content plane is enabled.
+_SPAN_FOLD = 0x5EED
+
+
+def content_enabled(cfg: ACSConfig) -> bool:
+    return cfg.chunk_tokens > 0
+
+
+def content_chunks(cfg: ACSConfig) -> int:
+    """Chunks per artifact under this config's chunk geometry."""
+    return n_chunks(cfg.artifact_tokens, cfg.chunk_tokens)
+
+
+def _chunk_sizes(cfg: ACSConfig) -> jax.Array:
+    return jnp.asarray(chunk_sizes(cfg.artifact_tokens,
+                                   cfg.chunk_tokens), jnp.int32)
+
+
+def draw_write_chunks(key: jax.Array, n_agents: int, n_chunks_: int,
+                      locality) -> jax.Array:
+    """Sample one step's per-agent write span as a (n, C) bool mask.
+
+    The single sampling source of truth for write locality: the scan
+    tick, the Pallas episode route and the oracle trace sampler all
+    call this with the same per-step key.  A span is *circular* -
+    chunk ``i`` is dirtied iff ``(i - start) mod C < L`` with
+    ``start ~ U[0, C)`` and ``L = clip(round(locality * C), 1, C)`` -
+    so locality is a pure span-length knob with no edge effects, and
+    ``locality`` may be a traced sweep scalar.  The key is derived by
+    ``fold_in(key, _SPAN_FOLD)``, leaving the action streams of the
+    same step key bit-identical to the pre-content sampler.
+    """
+    k = jax.random.fold_in(key, _SPAN_FOLD)
+    start = jax.random.randint(k, (n_agents,), 0, n_chunks_)
+    span = jnp.clip(jnp.round(
+        jnp.asarray(locality, jnp.float32) * n_chunks_).astype(jnp.int32),
+        1, n_chunks_)
+    idx = jnp.arange(n_chunks_, dtype=jnp.int32)
+    return ((idx[None, :] - start[:, None]) % n_chunks_) < span
+
+
 class ACSArrays(NamedTuple):
-    """alpha and the bookkeeping the strategies need (all int32)."""
+    """alpha and the bookkeeping the strategies need (all int32).
+
+    The three ``chunk_*`` leaves are the content plane
+    (``repro.content``); they are ``None`` when ``cfg.chunk_tokens ==
+    0`` (None leaves are empty pytree nodes, so the disabled carry is
+    structurally identical to the pre-content one).
+    """
 
     state: jax.Array            # (n, m) MESI state
     version: jax.Array          # (m,)   canonical version at authority
@@ -157,6 +234,9 @@ class ACSArrays(NamedTuple):
     reads_since_fetch: jax.Array  # (n, m) for ACCESS_COUNT
     agent_actions: jax.Array    # (n,)   logical action clock per agent
     last_validate: jax.Array    # (n, m) agent_actions value at last validate
+    chunk_version: jax.Array | None = None  # (m, C) per-chunk authority ver
+    chunk_sync: jax.Array | None = None     # (n, m, C) reader chunk vector
+    chunk_dirty: jax.Array | None = None    # (m, C) ever-written bitmap
 
 
 class ACSMetrics(NamedTuple):
@@ -175,6 +255,15 @@ class ACSMetrics(NamedTuple):
     #: after any forced revalidation (Invariant 3 enforcement surface:
     #: with ``max_stale_steps = K > 0`` this never exceeds K).
     max_consumed_staleness: jax.Array
+    #: bytes-on-wire ledger of the chunk content plane (all zero when
+    #: ``chunk_tokens == 0``).  ``delta_bytes`` is what delta coherence
+    #: actually shipped (stale chunks + signal envelope per fill);
+    #: ``full_bytes`` is what whole-artifact lazy would have shipped
+    #: for the *same* miss sequence - so ``delta <= full`` everywhere
+    #: and strict dominance means at least one partial re-fetch.
+    delta_bytes: jax.Array
+    full_bytes: jax.Array
+    n_chunks_fetched: jax.Array
 
     @property
     def total_tokens(self) -> jax.Array:
@@ -199,9 +288,25 @@ class ACSMetrics(NamedTuple):
 
 
 def init_arrays(cfg: ACSConfig) -> ACSArrays:
-    """Cold start: all caches Invalid, canonical version 1 (SS8.1)."""
+    """Cold start: all caches Invalid, canonical version 1 (SS8.1).
+
+    With the content plane enabled, chunk versions start at 1 and
+    reader chunk vectors at 0, mirroring the whole-artifact convention:
+    a cold fill ships every chunk."""
     n, m = cfg.n_agents, cfg.n_artifacts
     z = jnp.zeros((n, m), jnp.int32)
+    chunk_version = chunk_sync = chunk_dirty = None
+    if content_enabled(cfg):
+        if cfg.strategy not in CONTENT_STRATEGIES:
+            raise ValueError(
+                f"chunk content plane covers "
+                f"{[STRATEGY_NAMES[s] for s in CONTENT_STRATEGIES]} "
+                f"(write-invalidate, fetch-on-demand); got "
+                f"{STRATEGY_NAMES[cfg.strategy]}")
+        C = content_chunks(cfg)
+        chunk_version = jnp.ones((m, C), jnp.int32)
+        chunk_sync = jnp.zeros((n, m, C), jnp.int32)
+        chunk_dirty = jnp.zeros((m, C), jnp.int32)
     return ACSArrays(
         state=jnp.full((n, m), _I, jnp.int32),
         version=jnp.ones((m,), jnp.int32),
@@ -209,6 +314,9 @@ def init_arrays(cfg: ACSConfig) -> ACSArrays:
         reads_since_fetch=z,
         agent_actions=jnp.zeros((n,), jnp.int32),
         last_validate=z,
+        chunk_version=chunk_version,
+        chunk_sync=chunk_sync,
+        chunk_dirty=chunk_dirty,
     )
 
 
@@ -225,7 +333,16 @@ def _entry_expired(cfg: ACSConfig, arrays: ACSArrays, a, d) -> jax.Array:
 
 
 def _fill(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
-    """Coherence fill: FETCH_REQUEST -> content + version, I -> S."""
+    """Coherence fill: FETCH_REQUEST -> content + version, I -> S.
+
+    With the content plane on, the payload is a *delta*: only chunks
+    whose authority version exceeds the reader's chunk vector ship
+    (the reader's vector survives MESI invalidation - stale local
+    chunks are still valid bases for patching).  The token ledger is
+    untouched (it stays the paper's whole-artifact cost model); the
+    byte ledger records both what delta coherence shipped and what
+    whole-artifact lazy would have shipped for this same fill.
+    """
     arrays = arrays._replace(
         state=arrays.state.at[a, d].set(_S),
         last_sync=arrays.last_sync.at[a, d].set(arrays.version[d]),
@@ -237,6 +354,19 @@ def _fill(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
         fetch_tokens=met.fetch_tokens + cfg.artifact_tokens + SIGNAL_TOKENS,
         n_fetches=met.n_fetches + 1,
     )
+    if content_enabled(cfg):
+        stale = arrays.chunk_version[d] > arrays.chunk_sync[a, d]  # (C,)
+        delta_tokens = jnp.sum(jnp.where(stale, _chunk_sizes(cfg), 0))
+        met = met._replace(
+            delta_bytes=met.delta_bytes
+            + (delta_tokens + SIGNAL_TOKENS) * BYTES_PER_TOKEN,
+            full_bytes=met.full_bytes
+            + (cfg.artifact_tokens + SIGNAL_TOKENS) * BYTES_PER_TOKEN,
+            n_chunks_fetched=met.n_chunks_fetched
+            + jnp.sum(stale.astype(jnp.int32)),
+        )
+        arrays = arrays._replace(chunk_sync=arrays.chunk_sync.at[a, d].set(
+            arrays.chunk_version[d]))
     return arrays, met
 
 
@@ -305,8 +435,15 @@ def _do_read(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
     return arrays, met
 
 
-def _do_write(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
-    """Upgrade -> local write -> commit (SS5.3), serialized via authority."""
+def _do_write(cfg, arrays: ACSArrays, met: ACSMetrics, a, d,
+              wchunks=None):
+    """Upgrade -> local write -> commit (SS5.3), serialized via authority.
+
+    ``wchunks`` is the (C,) bool chunk mask this write dirties (content
+    plane only): the simulator samples it as a locality span
+    (``draw_write_chunks``), the live service measures it from actual
+    content diffs.  Required when ``cfg.chunk_tokens > 0``.
+    """
     # Read-modify-write: the writer needs a valid base copy.
     arrays, met = _access(cfg, arrays, met, a, d)
 
@@ -336,6 +473,24 @@ def _do_write(cfg, arrays: ACSArrays, met: ACSMetrics, a, d):
             arrays.agent_actions[a]),
     )
     met = met._replace(n_writes=met.n_writes + 1)
+
+    if content_enabled(cfg):
+        # Chunk-granular commit: bump only the dirtied span's versions,
+        # mark the dirty bitmap (monotone), and sync the writer's chunk
+        # vector to the post-commit state (its base copy was fresh via
+        # the RMW prologue and it authored the span itself).
+        if wchunks is None:
+            raise ValueError("content plane enabled but no write chunk "
+                             "mask was supplied to _do_write")
+        span = jnp.asarray(wchunks, bool)
+        new_cv = jnp.where(span, arrays.chunk_version[d] + 1,
+                           arrays.chunk_version[d])
+        arrays = arrays._replace(
+            chunk_version=arrays.chunk_version.at[d].set(new_cv),
+            chunk_dirty=arrays.chunk_dirty.at[d].set(jnp.where(
+                span, 1, arrays.chunk_dirty[d])),
+            chunk_sync=arrays.chunk_sync.at[a, d].set(new_cv),
+        )
 
     if cfg.strategy == EAGER:
         # Push-on-commit: pre-populate the caches of active sharers
@@ -369,10 +524,15 @@ class DecisionOutcome(NamedTuple):
 
     miss: jax.Array     # (n,) bool: action triggered a coherence fill
     version: jax.Array  # (n,) int32: last_sync[a, d] right after a's slot
+    #: (n, C) bool: chunks shipped to each agent's fill this pass
+    #: (content plane only; ``None`` when ``chunk_tokens == 0``).  The
+    #: live broker assembles the actual delta payload from these.
+    fetched_chunks: jax.Array | None = None
 
 
 def apply_actions(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
-                  acts: jax.Array, arts: jax.Array, writes: jax.Array):
+                  acts: jax.Array, arts: jax.Array, writes: jax.Array,
+                  write_chunks=None):
     """Apply one serialized authority pass for a fixed action vector.
 
     ``acts``/``writes`` are (n,) bools, ``arts`` (n,) int32 - at most
@@ -384,20 +544,30 @@ def apply_actions(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
     *real* client requests, so live decisions and simulated episodes
     execute literally the same code.
 
+    ``write_chunks`` is the (n, C) bool per-agent dirty chunk mask
+    (content plane only; ignored for reads).
+
     Returns ``(arrays, metrics, DecisionOutcome)``.
     """
+    content = content_enabled(cfg)
 
     def agent_body(a, carry):
-        arrays, met, out_miss, out_ver = carry
+        arrays, met, out_miss, out_ver, out_chunks = carry
         act = acts[a]
         d = arts[a]
         is_write = writes[a]
 
         def do_act(args):
-            arrays, met, out_miss, out_ver = args
+            arrays, met, out_miss, out_ver, out_chunks = args
             arrays = arrays._replace(
                 agent_actions=arrays.agent_actions.at[a].add(1))
             fetches_before = met.n_fetches
+            if content:
+                # Snapshot at slot start: a fill (if any) ships exactly
+                # the chunks stale *now* - the agent's own commit bumps
+                # versions only after its prologue fill.
+                stale_before = (arrays.chunk_version[d]
+                                > arrays.chunk_sync[a, d])
             if cfg.strategy == BROADCAST:
                 # Everything is already injected; actions are free.
                 met = met._replace(
@@ -409,28 +579,37 @@ def apply_actions(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
                 arrays = arrays._replace(version=jnp.where(
                     is_write, arrays.version.at[d].add(1), arrays.version))
             else:
+                wchunks = write_chunks[a] if content else None
                 arrays, met = jax.lax.cond(
                     is_write,
-                    lambda args: _do_write(cfg, *args, a, d),
+                    lambda args: _do_write(cfg, *args, a, d,
+                                           wchunks=wchunks),
                     lambda args: _do_read(cfg, *args, a, d),
                     (arrays, met))
-            out_miss = out_miss.at[a].set(met.n_fetches > fetches_before)
+            missed = met.n_fetches > fetches_before
+            out_miss = out_miss.at[a].set(missed)
             out_ver = out_ver.at[a].set(arrays.last_sync[a, d])
-            return arrays, met, out_miss, out_ver
+            if content:
+                out_chunks = out_chunks.at[a].set(
+                    jnp.logical_and(missed, stale_before))
+            return arrays, met, out_miss, out_ver, out_chunks
 
         return jax.lax.cond(act, do_act, lambda x: x,
-                            (arrays, met, out_miss, out_ver))
+                            (arrays, met, out_miss, out_ver, out_chunks))
 
-    arrays, met, miss, ver = jax.lax.fori_loop(
+    out_chunks0 = (jnp.zeros((cfg.n_agents, content_chunks(cfg)),
+                             jnp.bool_) if content else None)
+    arrays, met, miss, ver, fetched = jax.lax.fori_loop(
         0, cfg.n_agents, agent_body,
         (arrays, met, jnp.zeros((cfg.n_agents,), jnp.bool_),
-         jnp.zeros((cfg.n_agents,), jnp.int32)))
-    return arrays, met, DecisionOutcome(miss, ver)
+         jnp.zeros((cfg.n_agents,), jnp.int32), out_chunks0))
+    return arrays, met, DecisionOutcome(miss, ver, fetched)
 
 
 def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
          key: jax.Array, step: jax.Array,
-         volatility=None, p_act=None, rates: RateMatrices | None = None):
+         volatility=None, p_act=None, rates: RateMatrices | None = None,
+         locality=None):
     """One orchestration step for every agent (serialized authority).
 
     ``volatility`` and ``p_act`` default to the static config values but
@@ -438,14 +617,20 @@ def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
     a whole ``(volatility x run)`` sweep grid (the fleet-scale path in
     ``repro.sim.engine``).  ``rates`` generalizes both to traced
     per-agent x per-artifact matrices (heterogeneous workloads,
-    ``repro.sim.workloads``) and takes precedence when given.  Strategy
-    and the shape-determining fields stay static - they select code,
-    not data.
+    ``repro.sim.workloads``) and takes precedence when given.
+    ``locality`` (content plane only) is the traced write-locality
+    scalar, defaulting to ``cfg.write_locality``.  Strategy and the
+    shape-determining fields stay static - they select code, not data.
     """
     volatility = cfg.volatility if volatility is None else volatility
     p_act = cfg.p_act if p_act is None else p_act
     acts, arts, writes = draw_actions(
         key, cfg.n_agents, cfg.n_artifacts, volatility, p_act, rates)
+    wchunks = None
+    if content_enabled(cfg):
+        locality = cfg.write_locality if locality is None else locality
+        wchunks = draw_write_chunks(key, cfg.n_agents,
+                                    content_chunks(cfg), locality)
 
     if cfg.strategy == BROADCAST:
         # Full-state rebroadcast: every agent receives every artifact.
@@ -497,17 +682,19 @@ def tick(cfg: ACSConfig, arrays: ACSArrays, met: ACSMetrics,
         arrays, met = jax.lax.cond(
             do_refresh, refresh, lambda x: x, (arrays, met))
 
-    arrays, met, _ = apply_actions(cfg, arrays, met, acts, arts, writes)
+    arrays, met, _ = apply_actions(cfg, arrays, met, acts, arts, writes,
+                                   write_chunks=wchunks)
     return arrays, met
 
 
 def run_episode(cfg: ACSConfig, key: jax.Array,
                 volatility=None, p_act=None,
-                rates: RateMatrices | None = None) -> ACSMetrics:
+                rates: RateMatrices | None = None,
+                locality=None) -> ACSMetrics:
     """Run a full S-step episode; returns final metrics.
 
-    ``volatility`` / ``p_act`` may be traced scalars and ``rates`` a
-    traced heterogeneous rate-matrix triple (see ``tick``).
+    ``volatility`` / ``p_act`` / ``locality`` may be traced scalars and
+    ``rates`` a traced heterogeneous rate-matrix triple (see ``tick``).
     """
     arrays = init_arrays(cfg)
     met = init_metrics()
@@ -518,7 +705,7 @@ def run_episode(cfg: ACSConfig, key: jax.Array,
         step, k = inp
         arrays, met = tick(cfg, arrays, met, k, step,
                            volatility=volatility, p_act=p_act,
-                           rates=rates)
+                           rates=rates, locality=locality)
         return (arrays, met), None
 
     steps = jnp.arange(cfg.n_steps, dtype=jnp.int32)

@@ -7,12 +7,18 @@ wrappers in ``ops.py``; pure-jnp oracles in ``ref.py``):
   * ``decode_attention`` - flash-decode split-K (single-token serving)
   * ``rmsnorm``          - fused RMS normalization
   * ``mesi_tick``        - batched coherence tick (fleet-scale DES)
+  * ``chunk_tick``       - batched chunk-diff / delta-coherence tick
+                           (content plane; consumes mesi_tick's
+                           per-agent miss output)
 """
 
 from repro.kernels.ops import (rmsnorm, flash_attention, decode_attention,
                                mesi_tick)
 from repro.kernels import ref
 from repro.kernels.backend import interpret_default, resolve_interpret
+from repro.kernels.chunk_diff import (chunk_tick_pallas, chunk_tick_ref,
+                                      resolve_chunk_route)
 
 __all__ = ["rmsnorm", "flash_attention", "decode_attention", "mesi_tick",
+           "chunk_tick_pallas", "chunk_tick_ref", "resolve_chunk_route",
            "ref", "interpret_default", "resolve_interpret"]

@@ -1,0 +1,228 @@
+"""Batched chunk-diff / delta-coherence tick as a Pallas TPU kernel.
+
+The content plane (``repro.content``) tracks per-chunk version counters
+at the authority and a per-chunk sync vector per (agent, artifact)
+cache entry.  Per orchestration step, the hot work is: for every fill
+the MESI tick decided, compare the reader's chunk vector against the
+authority's chunk versions and count the stale chunks' bytes (delta
+fetch); for every commit, bump the dirtied span's versions.  Fleet
+sweeps run this batched over (sims x agents x artifacts x chunks) -
+this kernel does one whole tick of it in one ``pallas_call``.
+
+TPU adaptation mirrors ``mesi_transition``: one program owns a
+``block_sims`` slab of simulations in VMEM; agents are processed with
+a sequential fori_loop (the authority's serialization order - chunk
+versions bumped by agent ``a`` must be visible to the fill of agent
+``a+1`` in the same tick), while the sim dimension rides the VPU
+lanes.  Per-sim artifact choice becomes a one-hot mask over the
+artifact dim, exactly as in the MESI kernel.
+
+The MESI decision itself is **not** recomputed here: the kernel takes
+the per-agent ``miss`` indicator the MESI tick emits
+(``mesi_tick_pallas``'s sixth output), so the two kernels compose into
+one bit-exact tick and neither duplicates the other's state machine.
+
+Counters layout (out[..., c]): 0 delta_bytes (shipped), 1 full_bytes
+(what whole-artifact lazy would ship for the same fills),
+2 n_chunks_fetched; 3 reserved (zero).
+
+Routing matches ``mesi_tick``: ``interpret=None`` auto-detects via
+``repro.kernels.backend`` (compiled Mosaic on TPU, interpret mode
+elsewhere); ``REPRO_CHUNK_DIFF=scan|pallas`` forces the pure-jnp
+reference (``chunk_tick_ref``, bit-identical by construction and by
+the byte-exact oracle) or the kernel in the service decision layer and
+anywhere :func:`resolve_chunk_route` is consulted.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.content.chunks import BYTES_PER_TOKEN, chunk_sizes
+from repro.kernels.backend import resolve_interpret
+
+N_CHUNK_COUNTERS = 4
+
+
+def resolve_chunk_route(default: str = "auto") -> str:
+    """'scan' (pure-jnp reference) | 'pallas' for content-plane ticks
+    outside the fused engine (the engine follows ``REPRO_SIM_TICK``).
+    Forced with ``REPRO_CHUNK_DIFF``; ``auto`` follows the caller's
+    default."""
+    forced = os.environ.get("REPRO_CHUNK_DIFF", default)
+    if forced not in ("auto", "scan", "pallas"):
+        raise ValueError(f"REPRO_CHUNK_DIFF must be auto|scan|pallas, "
+                         f"got {forced!r}")
+    return default if forced == "auto" else forced
+
+
+def _chunk_kernel(cv_ref, cs_ref, dirty_ref, miss_ref, wact_ref, art_ref,
+                  wmask_ref,
+                  cv_out, cs_out, dirty_out, fetched_out, counter_out,
+                  *, n_agents: int, n_artifacts: int, n_chunks: int,
+                  chunk_tokens: int, artifact_tokens: int,
+                  signal_tokens: int):
+    cv = cv_ref[...]        # (bs, m, C) int32 authority chunk versions
+    cs = cs_ref[...]        # (bs, n, m, C) reader chunk vectors
+    dirty = dirty_ref[...]  # (bs, m, C) ever-written bitmap
+    miss = miss_ref[...]    # (bs, n) fill indicator from the MESI tick
+    wact = wact_ref[...]    # (bs, n) acting-write indicator
+    arts = art_ref[...]     # (bs, n) chosen artifact
+    wmask = wmask_ref[...]  # (bs, n, C) dirtied chunk span per writer
+    bs = cv.shape[0]
+    # (1, C) chunk token sizes from the static geometry (a ragged last
+    # chunk); built with iota - array constants can't be captured.
+    cidx = jax.lax.broadcasted_iota(jnp.int32, (1, n_chunks), 1)
+    last = artifact_tokens - (n_chunks - 1) * chunk_tokens
+    sizes_row = jnp.where(cidx < n_chunks - 1, chunk_tokens, last)
+    counters = jnp.zeros((bs, N_CHUNK_COUNTERS), jnp.int32)
+    fetched = jnp.zeros((bs, n_agents, n_chunks), jnp.int32)
+
+    def agent_body(a, carry):
+        cv, cs, dirty, fetched, counters = carry
+        miss_a = miss[:, a] != 0                    # (bs,)
+        w_a = wact[:, a] != 0
+        d_oh = (jax.lax.broadcasted_iota(jnp.int32, (bs, n_artifacts), 1)
+                == arts[:, a][:, None])             # (bs, m)
+        d3 = d_oh[:, :, None]                       # (bs, m, 1)
+
+        # --- delta fetch at this agent's serialization slot
+        ver_at = jnp.sum(jnp.where(d3, cv, 0), axis=1)        # (bs, C)
+        sync_at = jnp.sum(jnp.where(d3, cs[:, a, :, :], 0), axis=1)
+        fetch = jnp.logical_and(miss_a[:, None], ver_at > sync_at)
+        delta_tok = jnp.sum(jnp.where(fetch, sizes_row, 0), axis=1)
+        counters = counters.at[:, 0].add(jnp.where(
+            miss_a, (delta_tok + signal_tokens) * BYTES_PER_TOKEN, 0))
+        counters = counters.at[:, 1].add(jnp.where(
+            miss_a, (artifact_tokens + signal_tokens) * BYTES_PER_TOKEN,
+            0))
+        counters = counters.at[:, 2].add(
+            jnp.sum(fetch.astype(jnp.int32), axis=1))
+        fetched = fetched.at[:, a, :].set(fetch.astype(jnp.int32))
+        fill = jnp.logical_and(miss_a[:, None, None], d3)     # (bs, m, 1)
+        cs_a = jnp.where(fill, cv, cs[:, a, :, :])            # (bs, m, C)
+
+        # --- chunk-granular commit: bump the dirtied span
+        bump = jnp.logical_and(
+            jnp.logical_and(w_a[:, None, None], d3),
+            wmask[:, a, :][:, None, :] != 0)                  # (bs, m, C)
+        cv = jnp.where(bump, cv + 1, cv)
+        dirty = jnp.where(bump, 1, dirty)
+        cs_a = jnp.where(jnp.logical_and(w_a[:, None, None], d3),
+                         cv, cs_a)
+        cs = cs.at[:, a, :, :].set(cs_a)
+        return cv, cs, dirty, fetched, counters
+
+    cv, cs, dirty, fetched, counters = jax.lax.fori_loop(
+        0, n_agents, agent_body, (cv, cs, dirty, fetched, counters))
+    cv_out[...] = cv
+    cs_out[...] = cs
+    dirty_out[...] = dirty
+    fetched_out[...] = fetched
+    counter_out[...] = counters
+
+
+def chunk_tick_pallas(chunk_version, chunk_sync, chunk_dirty,
+                      miss, write_acts, arts, write_chunks, *,
+                      artifact_tokens: int, chunk_tokens: int,
+                      signal_tokens: int = 12, block_sims: int = 128,
+                      interpret: bool | None = None):
+    """One content-plane tick over a batch of simulations.
+
+    Shapes: chunk_version/chunk_dirty (B, m, C) int32, chunk_sync
+    (B, n, m, C) int32, miss/write_acts/arts (B, n) int32,
+    write_chunks (B, n, C) int32.  ``miss`` comes from the same tick's
+    ``mesi_tick_pallas`` call; ``write_acts`` is act AND write.
+    Returns (chunk_version', chunk_sync', chunk_dirty',
+    fetched (B, n, C), counters (B, 4)).
+    """
+    interpret = resolve_interpret(interpret)
+    B, n, m, C = chunk_sync.shape
+    bs = min(block_sims, B)
+    pad = (-B) % bs
+    if pad:
+        padded = []
+        for arr in (chunk_version, chunk_sync, chunk_dirty, miss,
+                    write_acts, arts, write_chunks):
+            padded.append(jnp.pad(arr, [(0, pad)] + [(0, 0)] *
+                                  (arr.ndim - 1)))
+        (chunk_version, chunk_sync, chunk_dirty, miss, write_acts, arts,
+         write_chunks) = padded
+    Bp = chunk_version.shape[0]
+    grid = (Bp // bs,)
+    kernel = functools.partial(
+        _chunk_kernel, n_agents=n, n_artifacts=m, n_chunks=C,
+        chunk_tokens=chunk_tokens, artifact_tokens=artifact_tokens,
+        signal_tokens=signal_tokens)
+    spec_mc = pl.BlockSpec((bs, m, C), lambda i: (i, 0, 0))
+    spec_nmc = pl.BlockSpec((bs, n, m, C), lambda i: (i, 0, 0, 0))
+    spec_n = pl.BlockSpec((bs, n), lambda i: (i, 0))
+    spec_nc = pl.BlockSpec((bs, n, C), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec_mc, spec_nmc, spec_mc, spec_n, spec_n, spec_n,
+                  spec_nc],
+        out_specs=[spec_mc, spec_nmc, spec_mc, spec_nc,
+                   pl.BlockSpec((bs, N_CHUNK_COUNTERS),
+                                lambda i: (i, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, m, C), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, n, m, C), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, m, C), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, n, C), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, N_CHUNK_COUNTERS), jnp.int32),
+        ],
+        interpret=interpret,
+    )(chunk_version, chunk_sync, chunk_dirty, miss, write_acts, arts,
+      write_chunks)
+    if pad:
+        out = tuple(o[:B] for o in out)
+    return out
+
+
+def chunk_tick_ref(chunk_version, chunk_sync, chunk_dirty,
+                   miss, write_acts, arts, write_chunks, *,
+                   artifact_tokens: int, chunk_tokens: int,
+                   signal_tokens: int = 12, block_sims: int = 128,
+                   interpret: bool | None = None):
+    """Pure-numpy reference of :func:`chunk_tick_pallas` (serialized
+    agents, same signature/returns) - the scan-style oracle the kernel
+    is asserted bit-identical against, and the route
+    ``REPRO_CHUNK_DIFF=scan`` forces in the service layer."""
+    cv = np.array(chunk_version, np.int32)
+    cs = np.array(chunk_sync, np.int32)
+    dirty = np.array(chunk_dirty, np.int32)
+    miss = np.asarray(miss)
+    wact = np.asarray(write_acts)
+    arts = np.asarray(arts, np.int64)
+    wmask = np.asarray(write_chunks)
+    B, n, m, C = cs.shape
+    sizes = chunk_sizes(artifact_tokens, chunk_tokens)
+    fetched = np.zeros((B, n, C), np.int32)
+    counters = np.zeros((B, N_CHUNK_COUNTERS), np.int32)
+    for s in range(B):
+        for a in range(n):
+            d = int(arts[s, a])
+            if miss[s, a]:
+                stale = cv[s, d] > cs[s, a, d]
+                counters[s, 0] += (int(sizes[stale].sum())
+                                   + signal_tokens) * BYTES_PER_TOKEN
+                counters[s, 1] += (artifact_tokens
+                                   + signal_tokens) * BYTES_PER_TOKEN
+                counters[s, 2] += int(stale.sum())
+                fetched[s, a] = stale
+                cs[s, a, d] = cv[s, d]
+            if wact[s, a]:
+                span = wmask[s, a] != 0
+                cv[s, d][span] += 1
+                dirty[s, d][span] = 1
+                cs[s, a, d] = cv[s, d]
+    return (jnp.asarray(cv), jnp.asarray(cs), jnp.asarray(dirty),
+            jnp.asarray(fetched), jnp.asarray(counters))

@@ -55,6 +55,7 @@ def episode_step_keys(keys: jax.Array, n_steps: int) -> jax.Array:
 def _mesi_kernel(state_ref, version_ref, sync_ref, reads_ref,
                  act_ref, art_ref, write_ref,
                  state_out, version_out, sync_out, reads_out, counter_out,
+                 miss_out,
                  *, n_agents: int, n_artifacts: int, artifact_tokens: int,
                  eager: bool, access_k: int, signal_tokens: int):
     state = state_ref[...]          # (bs, n, m) int32
@@ -66,9 +67,10 @@ def _mesi_kernel(state_ref, version_ref, sync_ref, reads_ref,
     writes = write_ref[...]         # (bs, n)
     bs = state.shape[0]
     counters = jnp.zeros((bs, N_COUNTERS), jnp.int32)
+    miss_mat = jnp.zeros((bs, n_agents), jnp.int32)
 
     def agent_body(a, carry):
-        state, version, sync, reads, counters = carry
+        state, version, sync, reads, counters, miss_mat = carry
         act = acts[:, a] != 0                       # (bs,)
         is_write = jnp.logical_and(act, writes[:, a] != 0)
         is_read = jnp.logical_and(act, writes[:, a] == 0)
@@ -95,6 +97,7 @@ def _mesi_kernel(state_ref, version_ref, sync_ref, reads_ref,
             miss, artifact_tokens + signal_tokens, 0))
         counters = counters.at[:, 3].add(miss.astype(jnp.int32))
         counters = counters.at[:, 4].add(hit.astype(jnp.int32))
+        miss_mat = miss_mat.at[:, a].set(miss.astype(jnp.int32))
 
         state = state.at[:, a, :].set(st_a)
         sync = sync.at[:, a, :].set(sy_a)
@@ -132,15 +135,17 @@ def _mesi_kernel(state_ref, version_ref, sync_ref, reads_ref,
         rmask = jnp.logical_and(is_read[:, None, None], d_oh[:, None, :])
         own = jnp.logical_and(rmask, jnp.logical_not(peer))
         reads = jnp.where(own, reads + 1, reads)
-        return state, version, sync, reads, counters
+        return state, version, sync, reads, counters, miss_mat
 
-    state, version, sync, reads, counters = jax.lax.fori_loop(
-        0, n_agents, agent_body, (state, version, sync, reads, counters))
+    state, version, sync, reads, counters, miss_mat = jax.lax.fori_loop(
+        0, n_agents, agent_body,
+        (state, version, sync, reads, counters, miss_mat))
     state_out[...] = state
     version_out[...] = version
     sync_out[...] = sync
     reads_out[...] = reads
     counter_out[...] = counters
+    miss_out[...] = miss_mat
 
 
 def mesi_tick_pallas(state, version, last_sync, reads_since_fetch,
@@ -152,8 +157,12 @@ def mesi_tick_pallas(state, version, last_sync, reads_since_fetch,
 
     Shapes: state/last_sync/reads (B, n, m) int32; version (B, m) int32;
     acts/arts/writes (B, n) int32.  Returns (state', version', sync',
-    reads', counters (B, 8)).  ``interpret=None`` auto-detects the
-    backend (compiled Mosaic on TPU, interpret mode elsewhere).
+    reads', counters (B, 8), miss (B, n)) - ``miss`` is the per-agent
+    coherence-fill indicator of this tick, which the chunk content
+    plane (``repro.kernels.chunk_diff``) consumes to route delta
+    fetches at the exact serialization slots the MESI decisions were
+    made at.  ``interpret=None`` auto-detects the backend (compiled
+    Mosaic on TPU, interpret mode elsewhere).
     """
     interpret = resolve_interpret(interpret)
     B, n, m = state.shape
@@ -181,13 +190,15 @@ def mesi_tick_pallas(state, version, last_sync, reads_since_fetch,
         grid=grid,
         in_specs=[spec3, spec2m, spec3, spec3, spec2n, spec2n, spec2n],
         out_specs=[spec3, spec2m, spec3, spec3,
-                   pl.BlockSpec((bs, N_COUNTERS), lambda i: (i, 0))],
+                   pl.BlockSpec((bs, N_COUNTERS), lambda i: (i, 0)),
+                   spec2n],
         out_shape=[
             jax.ShapeDtypeStruct((Bp, n, m), jnp.int32),
             jax.ShapeDtypeStruct((Bp, m), jnp.int32),
             jax.ShapeDtypeStruct((Bp, n, m), jnp.int32),
             jax.ShapeDtypeStruct((Bp, n, m), jnp.int32),
             jax.ShapeDtypeStruct((Bp, N_COUNTERS), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, n), jnp.int32),
         ],
         interpret=interpret,
     )(state, version, last_sync, reads_since_fetch, acts, arts, writes)
@@ -240,7 +251,7 @@ def mesi_decision_batch(state, version, last_sync, reads_since_fetch,
     for j, a in enumerate(order):
         acts_b[j + 1:, a] = 1
     tile = lambda arr: jnp.broadcast_to(arr, (B,) + arr.shape)
-    st, ver, sy, rd, cnt = mesi_tick_pallas(
+    st, ver, sy, rd, cnt, _ = mesi_tick_pallas(
         tile(state), tile(version), tile(last_sync),
         tile(reads_since_fetch), jnp.asarray(acts_b),
         tile(jnp.asarray(arts, jnp.int32)),

@@ -21,23 +21,25 @@ from repro.service.broker import (BROKER_STRATEGIES, BrokerConfig,
                                   ReadResult, WriteResult)
 from repro.service.batching import (BatchDecider, BatchDecision,
                                     resolve_decide_backend)
-from repro.service.client import (CoherentClient, ServicePortal,
-                                  SyncCoherentClient, make_clients)
+from repro.service.client import (CoherentClient, DeltaMismatch,
+                                  ServicePortal, SyncCoherentClient,
+                                  make_clients)
 from repro.service.adapters import (CoherentTool, ToolResult,
                                     autogen_functions, crewai_tool,
                                     langgraph_node)
 from repro.service.trace import (ServiceTrace, StepRecord, replay_trace,
-                                 verify_broker)
+                                 verify_broker, verify_broker_content)
 from repro.service.loadgen import LoadReport, drive_workload
 
 __all__ = [
     "BROKER_STRATEGIES", "BrokerConfig", "CoherenceBroker",
     "InvariantViolation", "ReadResult", "WriteResult",
     "BatchDecider", "BatchDecision", "resolve_decide_backend",
-    "CoherentClient", "ServicePortal", "SyncCoherentClient",
-    "make_clients",
+    "CoherentClient", "DeltaMismatch", "ServicePortal",
+    "SyncCoherentClient", "make_clients",
     "CoherentTool", "ToolResult", "autogen_functions", "crewai_tool",
     "langgraph_node",
     "ServiceTrace", "StepRecord", "replay_trace", "verify_broker",
+    "verify_broker_content",
     "LoadReport", "drive_workload",
 ]

@@ -40,10 +40,15 @@ import numpy as np
 
 from repro.core import acs
 from repro.kernels.backend import interpret_default
+from repro.kernels.chunk_diff import (chunk_tick_pallas, chunk_tick_ref,
+                                      resolve_chunk_route)
 from repro.kernels.mesi_transition import mesi_decision_batch
 
 #: strategies the kernel route supports (== oracle DIFFERENTIAL scope).
 KERNEL_STRATEGIES = (acs.LAZY, acs.EAGER, acs.ACCESS_COUNT)
+
+#: ACSMetrics content-plane counters forwarded as the wire-byte delta.
+_WIRE_FIELDS = ("delta_bytes", "full_bytes", "n_chunks_fetched")
 
 
 class BatchDecision(NamedTuple):
@@ -52,6 +57,10 @@ class BatchDecision(NamedTuple):
     miss: np.ndarray     # (n,) bool: request triggered a coherence fill
     version: np.ndarray  # (n,) int32: version served at the agent's slot
     ledger_delta: dict   # exact integer counter deltas for this batch
+    #: (n, C) bool chunks each fill shipped (content plane; else None)
+    fetched_chunks: np.ndarray | None = None
+    #: exact byte-ledger deltas (content plane; else None)
+    wire_delta: dict | None = None
 
 
 def _kernel_supported(cfg: acs.ACSConfig) -> bool:
@@ -82,10 +91,18 @@ def resolve_decide_backend(cfg: acs.ACSConfig,
 @functools.lru_cache(maxsize=None)
 def _scan_decider(cfg: acs.ACSConfig):
     """One compiled serialized-authority pass per static broker config;
-    every micro-batch of the broker's lifetime reuses it."""
+    every micro-batch of the broker's lifetime reuses it.  For chunked
+    configs the pass also carries the content plane (the per-agent
+    dirty chunk masks become a traced operand)."""
 
-    def fn(arrays, met, acts, arts, writes):
-        return acs.apply_actions(cfg, arrays, met, acts, arts, writes)
+    if acs.content_enabled(cfg):
+        def fn(arrays, met, acts, arts, writes, write_chunks):
+            return acs.apply_actions(cfg, arrays, met, acts, arts,
+                                     writes, write_chunks=write_chunks)
+    else:
+        def fn(arrays, met, acts, arts, writes):
+            return acs.apply_actions(cfg, arrays, met, acts, arts,
+                                     writes)
 
     return jax.jit(fn)
 
@@ -121,34 +138,54 @@ class BatchDecider:
 
     # ------------------------------------------------------------------
     def decide(self, acts: np.ndarray, arts: np.ndarray,
-               writes: np.ndarray) -> BatchDecision:
-        """Resolve one micro-batch (at most one request per agent)."""
+               writes: np.ndarray,
+               write_chunks: np.ndarray | None = None) -> BatchDecision:
+        """Resolve one micro-batch (at most one request per agent).
+
+        ``write_chunks`` (n, C) bool is required for chunked configs:
+        the *measured* dirty chunk mask of each write in the batch
+        (the broker diffs actual content digests)."""
         if self._deciding:
             raise RuntimeError(
                 "re-entrant decide(): the broker's single-writer "
                 "discipline was violated")
+        if acs.content_enabled(self.cfg) and write_chunks is None:
+            raise ValueError("chunked decider needs write_chunks masks")
         self._deciding = True
         try:
             if self.backend == "scan":
-                return self._decide_scan(acts, arts, writes)
-            return self._decide_pallas(acts, arts, writes)
+                return self._decide_scan(acts, arts, writes,
+                                         write_chunks)
+            return self._decide_pallas(acts, arts, writes, write_chunks)
         finally:
             self._deciding = False
 
     # ------------------------------------------------------------------
-    def _decide_scan(self, acts, arts, writes) -> BatchDecision:
+    def _decide_scan(self, acts, arts, writes,
+                     write_chunks) -> BatchDecision:
+        content = acs.content_enabled(self.cfg)
         before = {f: int(getattr(self.metrics, f))
-                  for f in _LEDGER_FIELDS}
-        self.arrays, self.metrics, out = self._scan(
-            self.arrays, self.metrics, jnp.asarray(acts, bool),
-            jnp.asarray(arts, jnp.int32), jnp.asarray(writes, bool))
+                  for f in _LEDGER_FIELDS + (_WIRE_FIELDS if content
+                                             else ())}
+        args = [self.arrays, self.metrics, jnp.asarray(acts, bool),
+                jnp.asarray(arts, jnp.int32), jnp.asarray(writes, bool)]
+        if content:
+            args.append(jnp.asarray(write_chunks, bool))
+        self.arrays, self.metrics, out = self._scan(*args)
         delta = {f: int(getattr(self.metrics, f)) - before[f]
                  for f in _LEDGER_FIELDS}
-        return BatchDecision(miss=np.asarray(out.miss, bool),
-                             version=np.asarray(out.version, np.int32),
-                             ledger_delta=delta)
+        wire = ({f: int(getattr(self.metrics, f)) - before[f]
+                 for f in _WIRE_FIELDS} if content else None)
+        return BatchDecision(
+            miss=np.asarray(out.miss, bool),
+            version=np.asarray(out.version, np.int32),
+            ledger_delta=delta,
+            fetched_chunks=(np.asarray(out.fetched_chunks, bool)
+                            if content else None),
+            wire_delta=wire)
 
-    def _decide_pallas(self, acts, arts, writes) -> BatchDecision:
+    def _decide_pallas(self, acts, arts, writes,
+                       write_chunks) -> BatchDecision:
         a = self.arrays
         st, ver, sy, rd, cnt, miss, served = mesi_decision_batch(
             a.state, a.version, a.last_sync, a.reads_since_fetch,
@@ -176,6 +213,38 @@ class BatchDecider:
         self.metrics = self.metrics._replace(**{
             f: getattr(self.metrics, f) + delta[f]
             for f in _LEDGER_FIELDS})
+        fetched = wire = None
+        if acs.content_enabled(self.cfg):
+            # Content plane rides the same serialization order: the
+            # chunk tick consumes the per-request miss bits and the
+            # measured dirty masks.  REPRO_CHUNK_DIFF=scan forces the
+            # pure-jnp reference (bit-identical; oracle-checked).
+            tick = (chunk_tick_ref
+                    if resolve_chunk_route("pallas") == "scan"
+                    else chunk_tick_pallas)
+            wact = (acts_np & writes_np).astype(np.int32)
+            cv, cs, dirty, fetched_b, ccnt = tick(
+                self.arrays.chunk_version[None],
+                self.arrays.chunk_sync[None],
+                self.arrays.chunk_dirty[None],
+                np.asarray(miss, np.int32)[None], wact[None],
+                np.asarray(arts, np.int32)[None],
+                np.asarray(write_chunks, np.int32)[None],
+                artifact_tokens=self.cfg.artifact_tokens,
+                chunk_tokens=self.cfg.chunk_tokens,
+                signal_tokens=acs.SIGNAL_TOKENS)
+            self.arrays = self.arrays._replace(
+                chunk_version=cv[0], chunk_sync=cs[0],
+                chunk_dirty=dirty[0])
+            ccnt_np = np.asarray(ccnt[0], np.int64)
+            wire = {"delta_bytes": int(ccnt_np[0]),
+                    "full_bytes": int(ccnt_np[1]),
+                    "n_chunks_fetched": int(ccnt_np[2])}
+            self.metrics = self.metrics._replace(**{
+                f: getattr(self.metrics, f) + wire[f]
+                for f in _WIRE_FIELDS})
+            fetched = np.asarray(fetched_b[0], bool)
         return BatchDecision(miss=np.asarray(miss, bool),
                              version=np.asarray(served, np.int32),
-                             ledger_delta=delta)
+                             ledger_delta=delta,
+                             fetched_chunks=fetched, wire_delta=wire)

@@ -33,6 +33,8 @@ from typing import Dict, NamedTuple, Optional, Sequence
 
 import numpy as np
 
+from repro.content.chunks import (BYTES_PER_TOKEN, ChunkStore,
+                                  diff_chunks)
 from repro.core import acs, invariants
 from repro.core.protocol import (ArtifactStore, EventBus, Message,
                                  TokenLedger)
@@ -74,6 +76,12 @@ class BrokerConfig:
     #: ring-buffer size for per-decision latency samples (stats
     #: percentiles); bounds the broker's memory under open-ended load.
     latency_window: int = 1 << 20
+    #: chunk-granular content plane (``repro.content``): with
+    #: ``chunk_tokens > 0`` the broker content-addresses every
+    #: artifact's chunks, a write's dirty set is *measured* by digest
+    #: diff, and a read miss ships only the reader's stale chunks
+    #: (``ReadResult.delta``).  0 = whole-artifact payloads.
+    chunk_tokens: int = 0
 
     def __post_init__(self):
         if self.strategy not in BROKER_STRATEGIES:
@@ -83,6 +91,24 @@ class BrokerConfig:
                 f"servable strategy; ttl is simulation-clock-only)")
         if len(set(self.artifacts)) != len(self.artifacts):
             raise ValueError("duplicate artifact ids")
+        if self.chunk_tokens > 0:
+            if acs.STRATEGY_CODES[
+                    self.strategy] not in acs.CONTENT_STRATEGIES:
+                raise ValueError(
+                    f"chunked broker serves "
+                    f"{[acs.STRATEGY_NAMES[s] for s in acs.CONTENT_STRATEGIES]}"
+                    f" (delta fetch is pull-only); got "
+                    f"{self.strategy!r}")
+            if self.max_stale_steps > 0:
+                # the byte-exact oracle leg (verify_broker_content)
+                # covers max_stale_steps=0 only; allowing the combo
+                # would build a broker that can never be verified
+                raise ValueError(
+                    "chunked broker does not support K-staleness "
+                    "enforcement (max_stale_steps > 0): the byte-exact "
+                    "content oracle covers the pull-only invalidation "
+                    "protocol without revalidation; run either "
+                    "chunk_tokens=0 or max_stale_steps=0")
 
     def acs_config(self, n_steps: int = 1) -> acs.ACSConfig:
         return acs.ACSConfig(
@@ -90,7 +116,8 @@ class BrokerConfig:
             artifact_tokens=self.artifact_tokens, n_steps=n_steps,
             strategy=acs.STRATEGY_CODES[self.strategy],
             access_k=self.access_k,
-            max_stale_steps=self.max_stale_steps)
+            max_stale_steps=self.max_stale_steps,
+            chunk_tokens=self.chunk_tokens)
 
 
 class ReadResult(NamedTuple):
@@ -98,11 +125,23 @@ class ReadResult(NamedTuple):
     version: int
     hit: bool            # False = coherence fill (tokens were charged)
     latency_s: float
+    #: chunked brokers only: the actual delta payload of a miss -
+    #: ((chunk_idx, chunk_tokens), ...) covering exactly the reader's
+    #: stale chunks (empty tuple on a hit; ``None`` when the content
+    #: plane is off).  ``content`` is always the full authority copy;
+    #: ``repro.content.apply_delta(prev, delta, chunk_tokens)`` patched
+    #: onto any previously-held copy reproduces it byte-for-byte.
+    delta: tuple | None = None
+    #: wire bytes this read cost under delta coherence (-1 when off)
+    delta_bytes: int = -1
 
 
 class WriteResult(NamedTuple):
     version: int
     latency_s: float
+    #: chunked brokers only: chunks this commit actually dirtied
+    #: (measured by content-address diff; ``None`` when off)
+    dirty_chunks: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -144,6 +183,14 @@ class CoherenceBroker:
                     f"broker's accounting is fixed-slot, like the "
                     f"simulator's)")
             self.store.put(name, list(content))
+        self.chunks: Optional[ChunkStore] = None
+        if config.chunk_tokens > 0:
+            self.chunks = ChunkStore(self.store, config.chunk_tokens)
+            for name in self.names:
+                self.chunks.register(name)
+        #: bytes-on-wire ledger (content plane; all zero when off)
+        self.wire = {"delta_bytes": 0, "full_bytes": 0,
+                     "n_chunks_fetched": 0}
         self.ledger = TokenLedger()
         self.trace = ServiceTrace.for_broker(config)
         self.latencies = collections.deque(maxlen=config.latency_window)
@@ -266,6 +313,34 @@ class CoherenceBroker:
                 if not req.future.done():
                     req.future.set_exception(e)
 
+    def _measure_write_masks(self, batch: list) -> Optional[np.ndarray]:
+        """(n, C) measured dirty chunk masks for the batch's writes.
+
+        Masks are diffed *sequentially in the authority's agent order*
+        against the content each write will actually see at its
+        serialization slot (two same-batch writers of one artifact:
+        the second diffs against the first's content, exactly as the
+        commits apply below)."""
+        if self.chunks is None:
+            return None
+        n = self.config.n_agents
+        masks = np.zeros((n, self.chunks.n_chunks_of(self.names[0])),
+                         bool)
+        pending: Dict[str, list] = {}
+        for req in sorted(batch, key=lambda r: r.agent):
+            if not req.is_write:
+                continue
+            name = self.names[req.artifact]
+            cur = pending.get(name)
+            if cur is None:
+                cur = list(self.store.get(name))
+            new = (list(req.content) if req.content is not None
+                   else cur)
+            masks[req.agent] = diff_chunks(cur, new,
+                                           self.config.chunk_tokens)
+            pending[name] = new
+        return masks
+
     def _decide_and_resolve(self, batch: list) -> None:
         n = self.config.n_agents
         acts = np.zeros(n, bool)
@@ -275,10 +350,12 @@ class CoherenceBroker:
             acts[req.agent] = True
             arts[req.agent] = req.artifact
             writes[req.agent] = req.is_write
+        wmasks = self._measure_write_masks(batch)
 
         ver_before = np.asarray(self.decider.arrays.version,
                                 np.int64).copy()
-        decision = self.decider.decide(acts, arts, writes)
+        decision = self.decider.decide(acts, arts, writes,
+                                       write_chunks=wmasks)
         ver_after = np.asarray(self.decider.arrays.version, np.int64)
 
         if self.config.check_invariants:
@@ -288,8 +365,13 @@ class CoherenceBroker:
         for field, delta in decision.ledger_delta.items():
             setattr(self.ledger, field,
                     getattr(self.ledger, field) + delta)
+        if decision.wire_delta is not None:
+            for field, delta in decision.wire_delta.items():
+                self.wire[field] += delta
 
         # content plane + responses, in the authority's agent order
+        # (reads at slot a see commits from slots < a, exactly the
+        # order the decision plane serialized)
         now = time.perf_counter()
         latencies = {}
         for req in sorted(batch, key=lambda r: r.agent):
@@ -301,20 +383,40 @@ class CoherenceBroker:
             if req.is_write:
                 content = (list(req.content) if req.content is not None
                            else list(self.store.get(name)))
-                self.store.put(name, content)
+                dirty = None
+                if self.chunks is not None:
+                    self.chunks.put(name, content)
+                    dirty = tuple(np.flatnonzero(wmasks[req.agent])
+                                  .tolist())
+                else:
+                    self.store.put(name, content)
                 self.bus.publish(Message(
                     "VERSION_UPDATE", f"agent-{req.agent}", name,
                     version, timestamp=now))
-                req.future.set_result(WriteResult(version, latency))
+                req.future.set_result(WriteResult(version, latency,
+                                                  dirty_chunks=dirty))
             else:
+                delta = None
+                delta_bytes = -1
+                if self.chunks is not None:
+                    fetched = np.flatnonzero(
+                        decision.fetched_chunks[req.agent])
+                    delta = self.chunks.delta(name, fetched)
+                    delta_bytes = 0
+                    if decision.miss[req.agent]:
+                        delta_bytes = (sum(len(c) for _, c in delta)
+                                       + acs.SIGNAL_TOKENS
+                                       ) * BYTES_PER_TOKEN
                 req.future.set_result(ReadResult(
                     tuple(self.store.get(name)), version,
                     hit=not bool(decision.miss[req.agent]),
-                    latency_s=latency))
+                    latency_s=latency, delta=delta,
+                    delta_bytes=delta_bytes))
         self.n_batches += 1
         if self.config.capture_trace:
             self.trace.append_step(acts, arts, writes, decision.miss,
-                                   decision.version, latencies)
+                                   decision.version, latencies,
+                                   write_chunks=wmasks)
 
     # ------------------------------------------------------ invariants
     def _check_invariants(self, batch, ver_before, ver_after) -> None:
@@ -361,7 +463,7 @@ class CoherenceBroker:
         lat = np.asarray(self.latencies) if self.latencies else \
             np.zeros(1)
         led = self.ledger
-        return {
+        out = {
             "strategy": self.config.strategy,
             "backend": self.decider.backend,
             "n_actions": led.n_reads + led.n_writes,
@@ -379,3 +481,10 @@ class CoherenceBroker:
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
         }
+        if self.chunks is not None:
+            out.update(self.wire)
+            out["bytes_savings_vs_full"] = 1.0 - (
+                self.wire["delta_bytes"]
+                / max(self.wire["full_bytes"], 1))
+            out["unique_chunks"] = self.chunks.n_unique_chunks
+        return out

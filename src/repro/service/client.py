@@ -14,12 +14,26 @@ import asyncio
 import threading
 from typing import Optional, Sequence
 
+from repro.content.chunks import apply_delta
 from repro.service.broker import (BrokerConfig, CoherenceBroker,
                                   ReadResult, WriteResult)
 
 
+class DeltaMismatch(AssertionError):
+    """A delta-patched mirror diverged from the authority copy."""
+
+
 class CoherentClient:
-    """One agent's handle on the broker (async)."""
+    """One agent's handle on the broker (async).
+
+    Against a *chunked* broker the client keeps a local mirror per
+    artifact and patches it with each read's delta payload
+    (``repro.content.apply_delta``) - the client-side half of delta
+    coherence.  Every patched mirror is checked byte-for-byte against
+    the authority copy the response carries; a mismatch raises
+    :class:`DeltaMismatch` (it would mean the broker shipped an
+    incomplete stale-chunk set).
+    """
 
     def __init__(self, broker: CoherenceBroker, agent_id: int,
                  name: Optional[str] = None) -> None:
@@ -29,11 +43,32 @@ class CoherentClient:
         self.n_reads = 0
         self.n_writes = 0
         self.n_hits = 0
+        self._mirror: dict = {}
+        self.delta_bytes_received = 0
+
+    def _patch_mirror(self, artifact: str, res: ReadResult) -> None:
+        if res.delta is None:
+            return
+        ct = self.broker.config.chunk_tokens
+        base = self._mirror.get(artifact)
+        if base is None:
+            # first contact: adopt the full copy (the broker charged a
+            # cold full-artifact delta for it anyway)
+            self._mirror[artifact] = res.content
+        else:
+            self._mirror[artifact] = apply_delta(base, res.delta, ct)
+        if res.delta_bytes > 0:
+            self.delta_bytes_received += res.delta_bytes
+        if self._mirror[artifact] != res.content:
+            raise DeltaMismatch(
+                f"agent {self.agent_id}: delta-patched mirror of "
+                f"{artifact!r} diverged from the authority copy")
 
     async def read(self, artifact: str) -> ReadResult:
         res = await self.broker.read(self.agent_id, artifact)
         self.n_reads += 1
         self.n_hits += int(res.hit)
+        self._patch_mirror(artifact, res)
         return res
 
     async def write(self, artifact: str,
@@ -41,6 +76,9 @@ class CoherentClient:
                     ) -> WriteResult:
         res = await self.broker.write(self.agent_id, artifact, content)
         self.n_writes += 1
+        if content is not None:
+            # the writer holds what it just committed
+            self._mirror[artifact] = tuple(int(t) for t in content)
         return res
 
     @property

@@ -38,6 +38,9 @@ class StepRecord:
     miss: tuple          # bool per acting agent (coherence fill)
     version: tuple       # served version per acting agent
     latency_s: tuple     # decision latency per acting agent
+    #: measured dirty chunk indices per acting agent (content plane;
+    #: empty tuples for reads / whole-artifact brokers)
+    chunks: tuple = ()
 
 
 @dataclasses.dataclass
@@ -50,6 +53,7 @@ class ServiceTrace:
     strategy: str
     access_k: int
     max_stale_steps: int
+    chunk_tokens: int = 0
     steps: list = dataclasses.field(default_factory=list)
 
     @classmethod
@@ -59,12 +63,19 @@ class ServiceTrace:
                    artifact_tokens=config.artifact_tokens,
                    strategy=config.strategy,
                    access_k=config.access_k,
-                   max_stale_steps=config.max_stale_steps)
+                   max_stale_steps=config.max_stale_steps,
+                   chunk_tokens=getattr(config, "chunk_tokens", 0))
 
     # -------------------------------------------------------- capture
     def append_step(self, acts, arts, writes, miss, version,
-                    latencies: Optional[dict] = None) -> None:
+                    latencies: Optional[dict] = None,
+                    write_chunks=None) -> None:
         agents = tuple(int(a) for a in np.flatnonzero(np.asarray(acts)))
+        chunks = ()
+        if write_chunks is not None:
+            chunks = tuple(
+                tuple(np.flatnonzero(write_chunks[a]).tolist())
+                if writes[a] else () for a in agents)
         self.steps.append(StepRecord(
             agents=agents,
             arts=tuple(int(arts[a]) for a in agents),
@@ -72,7 +83,8 @@ class ServiceTrace:
             miss=tuple(bool(miss[a]) for a in agents),
             version=tuple(int(version[a]) for a in agents),
             latency_s=tuple(float((latencies or {}).get(a, 0.0))
-                            for a in agents)))
+                            for a in agents),
+            chunks=chunks))
 
     @property
     def n_steps(self) -> int:
@@ -90,36 +102,55 @@ class ServiceTrace:
             n_steps=max(self.n_steps, 1),
             strategy=acs.STRATEGY_CODES[self.strategy],
             access_k=self.access_k,
-            max_stale_steps=self.max_stale_steps)
+            max_stale_steps=self.max_stale_steps,
+            chunk_tokens=self.chunk_tokens)
 
     def to_oracle_trace(self):
         """The captured batch stream as a ``sim.oracle.Trace`` (batches
         = steps; agent order within a batch is the serialization
-        order both executions share)."""
+        order both executions share).  Chunked traces carry the
+        measured per-write dirty masks, so the byte-exact content leg
+        replays the *actual* diffs the live broker served."""
+        from repro.content.chunks import n_chunks as _n_chunks
         from repro.sim import oracle
         T = max(self.n_steps, 1)
         acts = np.zeros((T, self.n_agents), bool)
         arts = np.zeros((T, self.n_agents), np.int32)
         writes = np.zeros((T, self.n_agents), bool)
+        write_chunks = None
+        if self.chunk_tokens > 0:
+            C = _n_chunks(self.artifact_tokens, self.chunk_tokens)
+            write_chunks = np.zeros((T, self.n_agents, C), bool)
         for s, rec in enumerate(self.steps):
-            for a, d, w in zip(rec.agents, rec.arts, rec.writes):
+            chunks = rec.chunks or ((),) * len(rec.agents)
+            for a, d, w, ch in zip(rec.agents, rec.arts, rec.writes,
+                                   chunks):
                 acts[s, a] = True
                 arts[s, a] = d
                 writes[s, a] = w
-        return oracle.Trace(acts=acts, arts=arts, writes=writes)
+                if write_chunks is not None and w:
+                    write_chunks[s, a, list(ch)] = True
+        return oracle.Trace(acts=acts, arts=arts, writes=writes,
+                            write_chunks=write_chunks)
 
     # --------------------------------------------------- serialization
     def to_json(self) -> str:
         payload = dataclasses.asdict(self)
-        payload["schema_version"] = 1
+        payload["schema_version"] = 2   # v2: chunk_tokens + step chunks
         return json.dumps(payload, indent=2)
 
     @classmethod
     def from_json(cls, text: str) -> "ServiceTrace":
         payload = json.loads(text)
         payload.pop("schema_version", None)
-        steps = [StepRecord(**{k: tuple(v) for k, v in s.items()})
-                 for s in payload.pop("steps")]
+        payload.setdefault("chunk_tokens", 0)   # v1 traces
+
+        def record(s: dict) -> StepRecord:
+            chunks = tuple(tuple(c) for c in s.pop("chunks", ()))
+            return StepRecord(chunks=chunks,
+                              **{k: tuple(v) for k, v in s.items()})
+
+        steps = [record(s) for s in payload.pop("steps")]
         return cls(steps=steps, **payload)
 
 
@@ -177,4 +208,52 @@ def verify_broker(broker, name: str = "service"):
         raise oracle.ConformanceError(
             f"live last_sync diverged from replay:\n{sync}\n"
             f"vs\n{report.last_sync}")
+    if broker.chunks is not None:
+        verify_broker_content(broker, name=name)
+    return report
+
+
+def verify_broker_content(broker, name: str = "service"):
+    """Byte-exact content-plane leg of broker verification: the
+    captured trace (with its *measured* per-write dirty masks) replays
+    through the chunked scan + Pallas + real-payload-store oracle legs
+    (``oracle.check_content_trace``), and the live broker's wire-byte
+    ledger, chunk state, and content-addressed store must match the
+    replay bit-for-bit - including every artifact's chunk index
+    reassembling to the canonical whole-artifact copy."""
+    from repro.content.chunks import reassemble, split_chunks
+    from repro.sim import oracle
+    report = oracle.check_content_trace(
+        broker.trace.acs_config(), broker.trace.to_oracle_trace(),
+        name=f"{name}:content")
+    for field in dataclasses.fields(oracle.ByteLedger):
+        live = int(broker.wire[field.name])
+        replayed = int(getattr(report.ledger, field.name))
+        if live != replayed:
+            raise oracle.ConformanceError(
+                f"live broker wire.{field.name} = {live} but oracle "
+                f"replay charged {replayed}")
+    arrays = broker.decider.arrays
+    for label, live, want in (
+            ("chunk_version", arrays.chunk_version,
+             report.chunk_version),
+            ("chunk_sync", arrays.chunk_sync, report.chunk_sync),
+            ("chunk_dirty", arrays.chunk_dirty, report.chunk_dirty)):
+        live = np.asarray(live, np.int32)
+        if not np.array_equal(live, want):
+            raise oracle.ConformanceError(
+                f"live {label} diverged from replay:\n{live}\nvs\n"
+                f"{want}")
+    for d, artifact in enumerate(broker.names):
+        canonical = tuple(broker.store.get(artifact))
+        rebuilt = broker.chunks.reassembled(artifact)
+        if rebuilt != canonical:
+            raise oracle.ConformanceError(
+                f"chunk index of {artifact!r} does not reassemble to "
+                f"the canonical artifact")
+        if reassemble(split_chunks(canonical,
+                                   broker.config.chunk_tokens)
+                      ) != canonical:
+            raise oracle.ConformanceError(
+                f"chunk round-trip broke for {artifact!r}")
     return report

@@ -85,9 +85,12 @@ def _make_shard_map(fn, mesh, in_specs, out_specs):
             continue
     raise TypeError("no compatible shard_map signature found")
 
+from repro.content.chunks import BYTES_PER_TOKEN
 from repro.core import acs
 from repro.core.states import MESIState
 from repro.kernels.backend import interpret_default
+from repro.kernels.chunk_diff import (N_CHUNK_COUNTERS,
+                                      chunk_tick_pallas)
 from repro.kernels.mesi_transition import (N_COUNTERS, episode_step_keys,
                                            mesi_tick_pallas)
 from repro.launch.mesh import make_sweep_mesh
@@ -148,10 +151,14 @@ def trace_counter(clear_cache: bool = True):
 # ---------------------------------------------------------------------------
 # Static signature + jit cache.
 
-#: ACSConfig fields baked into compiled code.  ``volatility`` and
-#: ``p_act`` are deliberately absent: they are traced sweep axes.
+#: ACSConfig fields baked into compiled code.  ``volatility``,
+#: ``p_act`` and ``write_locality`` are deliberately absent: they are
+#: traced sweep axes.  ``chunk_tokens`` is static (it sets the chunk
+#: axis shape); one compiled program covers every locality x
+#: volatility x family point of a given chunk geometry.
 _STATIC_FIELDS = ("n_agents", "n_artifacts", "artifact_tokens", "n_steps",
-                  "strategy", "ttl_events", "access_k", "max_stale_steps")
+                  "strategy", "ttl_events", "access_k", "max_stale_steps",
+                  "chunk_tokens")
 
 _GRID_CACHE: dict = {}
 
@@ -335,6 +342,12 @@ class RunStats:
     #: worst staleness a served cache hit carried (post-revalidation);
     #: ``-1`` on the Pallas tick path (not tracked there).
     max_consumed_staleness_max: int = -1
+    #: content-plane bytes-on-wire (``-1`` when ``chunk_tokens == 0``):
+    #: delta = what chunk coherence shipped, full = what whole-artifact
+    #: lazy would ship for the same miss sequence.
+    delta_bytes_mean: float = -1.0
+    full_bytes_mean: float = -1.0
+    n_chunks_fetched_mean: float = -1.0
 
     def savings_vs(self, baseline: "RunStats") -> float:
         return 1.0 - self.total_tokens_mean / baseline.total_tokens_mean
@@ -375,10 +388,11 @@ class Comparison:
 
 
 def _episode_metrics(cfg: acs.ACSConfig, key: jax.Array,
-                     volatility=None, p_act=None, rates=None) -> dict:
+                     volatility=None, p_act=None, rates=None,
+                     locality=None) -> dict:
     met = acs.run_episode(cfg, key, volatility=volatility, p_act=p_act,
-                          rates=rates)
-    return {
+                          rates=rates, locality=locality)
+    out = {
         "total_tokens": met.total_tokens,
         "sync_tokens": met.sync_tokens,
         "fetch_tokens": met.fetch_tokens,
@@ -393,24 +407,56 @@ def _episode_metrics(cfg: acs.ACSConfig, key: jax.Array,
         "max_version_lag": met.max_version_lag,
         "max_consumed_staleness": met.max_consumed_staleness,
     }
+    if acs.content_enabled(cfg):
+        out["delta_bytes"] = met.delta_bytes
+        out["full_bytes"] = met.full_bytes
+        out["n_chunks_fetched"] = met.n_chunks_fetched
+    return out
+
+
+def _broadcast_content_fill(cfg: acs.ACSConfig, out: dict) -> dict:
+    """Analytic bytes-on-wire of the broadcast baseline (content-plane
+    grids only): every step injects every artifact into every agent,
+    so delta and whole-artifact accounting coincide - ``n_steps * n *
+    m * (|d| + signal)`` bytes, exactly mirroring the token-ledger's
+    ``broadcast_tokens`` accumulation."""
+    per_ep = (cfg.n_steps * cfg.n_agents * cfg.n_artifacts
+              * (cfg.artifact_tokens + acs.SIGNAL_TOKENS)
+              * BYTES_PER_TOKEN)
+    like = out["total_tokens"]
+    out = dict(out)
+    out["delta_bytes"] = jnp.full_like(like, per_ep)
+    out["full_bytes"] = jnp.full_like(like, per_ep)
+    out["n_chunks_fetched"] = jnp.full_like(
+        like, cfg.n_steps * cfg.n_agents * cfg.n_artifacts
+        * acs.content_chunks(cfg))
+    return out
 
 
 def _episodes_pallas(cfg: acs.ACSConfig, keys: jax.Array, vols: jax.Array,
                      p_acts: jax.Array,
-                     rates: Optional[acs.RateMatrices] = None) -> dict:
+                     rates: Optional[acs.RateMatrices] = None,
+                     locs: Optional[jax.Array] = None) -> dict:
     """B episodes through the batched Pallas MESI tick.
 
     ``keys`` (B, 2) uint32, ``vols`` / ``p_acts`` (B,) traced scalars,
     ``rates`` an optional batched ``RateMatrices`` ((B, n) / (B, n, m)
-    leaves; overrides the scalars - the heterogeneous workload route).
-    Returns the metrics dict of (B,) arrays.  Staleness diagnostics
-    (``max_staleness`` / ``max_version_lag`` / ``max_consumed_staleness``)
-    are not tracked by the kernel and report the ``-1`` not-tracked
-    sentinel - this is the throughput path for token-traffic metrics;
-    use the scan path when auditing staleness invariants.
+    leaves; overrides the scalars - the heterogeneous workload route),
+    ``locs`` the (B,) traced write-locality scalars (content plane
+    only).  Returns the metrics dict of (B,) arrays.  Staleness
+    diagnostics (``max_staleness`` / ``max_version_lag`` /
+    ``max_consumed_staleness``) are not tracked by the kernel and
+    report the ``-1`` not-tracked sentinel - this is the throughput
+    path for token-traffic metrics; use the scan path when auditing
+    staleness invariants.  With the content plane enabled, every MESI
+    tick is chased by one ``chunk_tick_pallas`` call fed the MESI
+    kernel's per-agent miss output - same serialization order, so the
+    byte ledger is bit-identical to the scan path.
     """
     B = keys.shape[0]
     n, m = cfg.n_agents, cfg.n_artifacts
+    content = acs.content_enabled(cfg)
+    C = acs.content_chunks(cfg) if content else 0
     step_keys = episode_step_keys(keys, cfg.n_steps)  # (S, B, 2)
 
     def draw(k, v, p, r):
@@ -421,14 +467,15 @@ def _episodes_pallas(cfg: acs.ACSConfig, keys: jax.Array, vols: jax.Array,
         return a.astype(jnp.int32), d, w.astype(jnp.int32)
 
     def body(carry, ks):
-        state, version, sync, reads, counters, n_reads, n_writes = carry
+        (state, version, sync, reads, counters, n_reads, n_writes,
+         cv, cs, dirty, ccounters) = carry
         if rates is None:
             a, d, w = jax.vmap(
                 lambda k, v, p: draw(k, v, p, None))(ks, vols, p_acts)
         else:
             a, d, w = jax.vmap(
                 lambda k, r: draw(k, None, None, r))(ks, rates)
-        state, version, sync, reads, cnt = mesi_tick_pallas(
+        state, version, sync, reads, cnt, miss = mesi_tick_pallas(
             state, version, sync, reads, a, d, w,
             artifact_tokens=cfg.artifact_tokens,
             eager=cfg.strategy == acs.EAGER,
@@ -438,8 +485,18 @@ def _episodes_pallas(cfg: acs.ACSConfig, keys: jax.Array, vols: jax.Array,
         counters = counters + cnt
         n_reads = n_reads + jnp.sum(a * (1 - w), axis=1)
         n_writes = n_writes + jnp.sum(a * w, axis=1)
+        if content:
+            wch = jax.vmap(
+                lambda k, loc: acs.draw_write_chunks(k, n, C, loc)
+            )(ks, locs).astype(jnp.int32)
+            cv, cs, dirty, _, ccnt = chunk_tick_pallas(
+                cv, cs, dirty, miss, a * w, d, wch,
+                artifact_tokens=cfg.artifact_tokens,
+                chunk_tokens=cfg.chunk_tokens,
+                signal_tokens=acs.SIGNAL_TOKENS)
+            ccounters = ccounters + ccnt
         return (state, version, sync, reads, counters,
-                n_reads, n_writes), None
+                n_reads, n_writes, cv, cs, dirty, ccounters), None
 
     init = (
         jnp.full((B, n, m), _I, jnp.int32),
@@ -449,16 +506,20 @@ def _episodes_pallas(cfg: acs.ACSConfig, keys: jax.Array, vols: jax.Array,
         jnp.zeros((B, N_COUNTERS), jnp.int32),
         jnp.zeros((B,), jnp.int32),
         jnp.zeros((B,), jnp.int32),
+        jnp.ones((B, m, C), jnp.int32) if content else None,
+        jnp.zeros((B, n, m, C), jnp.int32) if content else None,
+        jnp.zeros((B, m, C), jnp.int32) if content else None,
+        jnp.zeros((B, N_CHUNK_COUNTERS), jnp.int32) if content else None,
     )
-    (_, _, _, _, counters, n_reads, n_writes), _ = jax.lax.scan(
-        body, init, step_keys)
+    (_, _, _, _, counters, n_reads, n_writes, _, _, _, ccounters), _ = \
+        jax.lax.scan(body, init, step_keys)
 
     fetch, signal, push = counters[:, 0], counters[:, 1], counters[:, 2]
     n_fetches, n_hits = counters[:, 3], counters[:, 4]
     z = jnp.zeros((B,), jnp.int32)
     untracked = jnp.full((B,), -1, jnp.int32)   # sentinel, see docstring
     denom = jnp.maximum(n_hits + n_fetches, 1)
-    return {
+    out = {
         "total_tokens": fetch + signal + push,
         "sync_tokens": fetch + signal,
         "fetch_tokens": fetch,
@@ -473,6 +534,11 @@ def _episodes_pallas(cfg: acs.ACSConfig, keys: jax.Array, vols: jax.Array,
         "max_version_lag": untracked,
         "max_consumed_staleness": untracked,
     }
+    if content:
+        out["delta_bytes"] = ccounters[:, 0]
+        out["full_bytes"] = ccounters[:, 1]
+        out["n_chunks_fetched"] = ccounters[:, 2]
+    return out
 
 
 def _grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
@@ -504,35 +570,48 @@ def _grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
     fn = _GRID_CACHE.get(cache_key)
     if fn is not None:
         return fn
-    bc_cfg = dataclasses.replace(cfg, strategy=acs.BROADCAST)
+    content = acs.content_enabled(cfg)
+    # Broadcast has no content plane (bulk injection ships everything);
+    # its byte columns are filled analytically below.
+    bc_cfg = dataclasses.replace(cfg, strategy=acs.BROADCAST,
+                                 chunk_tokens=0)
 
-    def scan_variant(vcfg, vols, p_acts, keys):
-        def cell(v, p, ks):
-            return jax.vmap(
-                lambda k: _episode_metrics(vcfg, k, v, p))(ks)
-        return jax.vmap(cell)(vols, p_acts, keys)
+    def scan_variant(vcfg, vols, p_acts, locs, keys):
+        def cell(v, p, loc, ks):
+            return jax.vmap(lambda k: _episode_metrics(
+                vcfg, k, v, p, locality=loc))(ks)
+        return jax.vmap(cell)(vols, p_acts, locs, keys)
 
-    def pallas_variant(vcfg, vols, p_acts, keys):
+    def pallas_variant(vcfg, vols, p_acts, locs, keys):
         V, R = keys.shape[0], keys.shape[1]
         out = _episodes_pallas(
             vcfg, keys.reshape(V * R, keys.shape[2]),
-            jnp.repeat(vols, R), jnp.repeat(p_acts, R))
+            jnp.repeat(vols, R), jnp.repeat(p_acts, R),
+            locs=jnp.repeat(locs, R) if content else None)
         return {k: a.reshape(V, R) for k, a in out.items()}
 
     coherent = pallas_variant if tick_backend == "pallas" else scan_variant
 
-    def run_grid(vols, p_acts, base_keys, run_ids):
+    def run_grid(*args):
+        if content:
+            vols, p_acts, locs, base_keys, run_ids = args
+        else:
+            vols, p_acts, base_keys, run_ids = args
+            locs = jnp.zeros_like(vols)
         _note_trace()
         keys = jax.vmap(lambda bk: acs.run_keys(bk, run_ids))(base_keys)
         outs = []
         if include_broadcast:
             # Broadcast is a bulk-inject path with no per-agent kernel;
             # it always takes the scan variant.
-            outs.append(scan_variant(bc_cfg, vols, p_acts, keys))
-        outs.append(coherent(cfg, vols, p_acts, keys))
+            bc = scan_variant(bc_cfg, vols, p_acts, locs, keys)
+            if content:
+                bc = _broadcast_content_fill(cfg, bc)
+            outs.append(bc)
+        outs.append(coherent(cfg, vols, p_acts, locs, keys))
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
 
-    fn = _shard_wrap(run_grid, plan, n_cell_operands=3)
+    fn = _shard_wrap(run_grid, plan, n_cell_operands=4 if content else 3)
     _GRID_CACHE[cache_key] = fn
     return fn
 
@@ -562,35 +641,46 @@ def _het_grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
     fn = _GRID_CACHE.get(cache_key)
     if fn is not None:
         return fn
-    bc_cfg = dataclasses.replace(cfg, strategy=acs.BROADCAST)
+    content = acs.content_enabled(cfg)
+    bc_cfg = dataclasses.replace(cfg, strategy=acs.BROADCAST,
+                                 chunk_tokens=0)
 
-    def scan_variant(vcfg, rates, keys):
-        def cell(r, ks):
-            return jax.vmap(
-                lambda k: _episode_metrics(vcfg, k, rates=r))(ks)
-        return jax.vmap(cell)(rates, keys)
+    def scan_variant(vcfg, rates, locs, keys):
+        def cell(r, loc, ks):
+            return jax.vmap(lambda k: _episode_metrics(
+                vcfg, k, rates=r, locality=loc))(ks)
+        return jax.vmap(cell)(rates, locs, keys)
 
-    def pallas_variant(vcfg, rates, keys):
+    def pallas_variant(vcfg, rates, locs, keys):
         W, R = keys.shape[0], keys.shape[1]
         flat = jax.tree_util.tree_map(
             lambda x: jnp.repeat(x, R, axis=0), rates)
         out = _episodes_pallas(
             vcfg, keys.reshape(W * R, keys.shape[2]),
-            None, None, rates=flat)
+            None, None, rates=flat,
+            locs=jnp.repeat(locs, R) if content else None)
         return {k: a.reshape(W, R) for k, a in out.items()}
 
     coherent = pallas_variant if tick_backend == "pallas" else scan_variant
 
-    def run_grid(rates, base_keys, run_ids):
+    def run_grid(*args):
+        if content:
+            rates, locs, base_keys, run_ids = args
+        else:
+            rates, base_keys, run_ids = args
+            locs = jnp.zeros_like(rates.p_act[..., 0])
         _note_trace()
         keys = jax.vmap(lambda bk: acs.run_keys(bk, run_ids))(base_keys)
         outs = []
         if include_broadcast:
-            outs.append(scan_variant(bc_cfg, rates, keys))
-        outs.append(coherent(cfg, rates, keys))
+            bc = scan_variant(bc_cfg, rates, locs, keys)
+            if content:
+                bc = _broadcast_content_fill(cfg, bc)
+            outs.append(bc)
+        outs.append(coherent(cfg, rates, locs, keys))
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
 
-    fn = _shard_wrap(run_grid, plan, n_cell_operands=2)
+    fn = _shard_wrap(run_grid, plan, n_cell_operands=3 if content else 2)
     _GRID_CACHE[cache_key] = fn
     return fn
 
@@ -651,6 +741,12 @@ def _result_from(cell: dict, name: str, strategy_name: str,
         max_version_lag_max=int(np.max(cell["max_version_lag"])),
         max_consumed_staleness_max=int(
             np.max(cell["max_consumed_staleness"])),
+        delta_bytes_mean=float(np.mean(cell["delta_bytes"]))
+        if "delta_bytes" in cell else -1.0,
+        full_bytes_mean=float(np.mean(cell["full_bytes"]))
+        if "full_bytes" in cell else -1.0,
+        n_chunks_fetched_mean=float(np.mean(cell["n_chunks_fetched"]))
+        if "n_chunks_fetched" in cell else -1.0,
     )
     return RunResult(stats=stats, per_run_total_tokens=total,
                      per_run_chr=chr_)
@@ -701,11 +797,15 @@ def run_scenario(scn: ScenarioConfig,
     plan = shard_plan(1, scn.n_runs, devices)
     fn = _grid_fn(scn.acs, include_broadcast=False, tick_backend=backend,
                   plan=plan)
-    out = _grid_call(
-        fn, plan, scn.n_runs,
+    cell_ops = [
         jnp.asarray([scn.acs.volatility], jnp.float32),
         jnp.asarray([scn.acs.p_act], jnp.float32),
-        _base_keys([scn.seed]))
+    ]
+    if acs.content_enabled(scn.acs):
+        cell_ops.append(jnp.asarray([scn.acs.write_locality],
+                                    jnp.float32))
+    out = _grid_call(fn, plan, scn.n_runs, *cell_ops,
+                     _base_keys([scn.seed]))
     return _result_from(
         _cell(out, 0, 0), scn.name,
         acs.STRATEGY_NAMES[scn.acs.strategy], scn.n_runs)
@@ -736,11 +836,15 @@ def compare_grid(scns: Sequence[ScenarioConfig],
         plan = shard_plan(len(sub), n_runs, devices)
         fn = _grid_fn(cfg, include_broadcast=True, tick_backend=backend,
                       plan=plan)
-        out = _grid_call(
-            fn, plan, n_runs,
+        cell_ops = [
             jnp.asarray([s.acs.volatility for s in sub], jnp.float32),
             jnp.asarray([s.acs.p_act for s in sub], jnp.float32),
-            _base_keys([s.seed for s in sub]))
+        ]
+        if acs.content_enabled(cfg):
+            cell_ops.append(jnp.asarray(
+                [s.acs.write_locality for s in sub], jnp.float32))
+        out = _grid_call(fn, plan, n_runs, *cell_ops,
+                         _base_keys([s.seed for s in sub]))
         for j, i in enumerate(idxs):
             bc = _result_from(_cell(out, 0, j), sub[j].name,
                               acs.STRATEGY_NAMES[acs.BROADCAST], n_runs)
@@ -780,6 +884,13 @@ def _rate_stack(workloads) -> acs.RateMatrices:
         lambda *xs: jnp.stack(xs), *[w.rates() for w in workloads])
 
 
+def _locality_stack(workloads) -> jax.Array:
+    """(W,) traced write-locality operand of a content-plane grid."""
+    return jnp.asarray(
+        [getattr(w, "write_locality", w.acs.write_locality)
+         for w in workloads], jnp.float32)
+
+
 def compare_workloads(workloads, tick_backend: Optional[str] = None,
                       devices: Optional[int] = None
                       ) -> list["Comparison"]:
@@ -807,7 +918,10 @@ def compare_workloads(workloads, tick_backend: Optional[str] = None,
         plan = shard_plan(len(sub), n_runs, devices)
         fn = _het_grid_fn(cfg, include_broadcast=True,
                           tick_backend=backend, plan=plan)
-        out = _grid_call(fn, plan, n_runs, _rate_stack(sub),
+        cell_ops = [_rate_stack(sub)]
+        if acs.content_enabled(cfg):
+            cell_ops.append(_locality_stack(sub))
+        out = _grid_call(fn, plan, n_runs, *cell_ops,
                          _base_keys([w.seed for w in sub]))
         for j, i in enumerate(idxs):
             bc = _result_from(_cell(out, 0, j), sub[j].name,
@@ -826,7 +940,10 @@ def run_workload(w, tick_backend: Optional[str] = None,
     plan = shard_plan(1, w.n_runs, devices)
     fn = _het_grid_fn(w.acs, include_broadcast=False,
                       tick_backend=backend, plan=plan)
-    out = _grid_call(fn, plan, w.n_runs, _rate_stack([w]),
+    cell_ops = [_rate_stack([w])]
+    if acs.content_enabled(w.acs):
+        cell_ops.append(_locality_stack([w]))
+    out = _grid_call(fn, plan, w.n_runs, *cell_ops,
                      _base_keys([w.seed]))
     return _result_from(_cell(out, 0, 0), w.name,
                         acs.STRATEGY_NAMES[w.acs.strategy], w.n_runs)

@@ -32,6 +32,14 @@ Scope notes:
   * The Pallas kernel tracks token counters, not the staleness
     diagnostics; its ledger comparison covers every counter the kernel
     emits (fetch/signal/push tokens, fetches, hits, invalidations).
+
+Beyond the four token-ledger legs, :func:`check_content_trace` is the
+**byte-exact** leg for the chunk-granular content plane
+(``repro.content``): the same trace replays through the chunked scan
+path, the Pallas chunk-diff route, a real-payload content-addressed
+chunk store (asserting every patched reader copy reassembles to the
+authority artifact), and the whole-artifact protocol baseline -
+bit-identical byte ledgers, ``delta <= full`` per fill.
 """
 
 from __future__ import annotations
@@ -61,11 +69,18 @@ class ConformanceError(AssertionError):
 
 @dataclasses.dataclass(frozen=True)
 class Trace:
-    """One sampled episode of actions, (n_steps, n_agents) arrays."""
+    """One sampled episode of actions, (n_steps, n_agents) arrays.
+
+    ``write_chunks`` is the content plane's per-write dirty chunk mask
+    ((n_steps, n_agents, C) bool; ``None`` for whole-artifact traces):
+    engine traces sample it from the write-locality span distribution,
+    service traces record the *measured* content diff of each commit.
+    """
 
     acts: np.ndarray    # bool: agent a acted at step s
     arts: np.ndarray    # int32: artifact chosen
     writes: np.ndarray  # bool: action was a write
+    write_chunks: np.ndarray | None = None
 
     @property
     def n_actions(self) -> int:
@@ -115,17 +130,29 @@ def episode_key(seed: int, run: int = 0) -> jax.Array:
 
 
 def sample_trace(cfg: acs.ACSConfig, key: jax.Array,
-                 rates: acs.RateMatrices | None = None) -> Trace:
+                 rates: acs.RateMatrices | None = None,
+                 locality: float | None = None) -> Trace:
     """Sample the action stream ``run_episode(cfg, key, rates=rates)``
     executes, via the shared ``acs.draw_actions`` sampler and the same
-    per-step key split."""
+    per-step key split.  With the content plane enabled the per-step
+    write spans are sampled too (``acs.draw_write_chunks``, same
+    fold-in key schedule the engine uses), so the trace pins byte
+    ledgers as exactly as it pins token ledgers."""
     keys = jax.random.split(key, cfg.n_steps)
     acts, arts, writes = jax.vmap(
         lambda k: acs.draw_actions(k, cfg.n_agents, cfg.n_artifacts,
                                    cfg.volatility, cfg.p_act, rates))(keys)
+    write_chunks = None
+    if acs.content_enabled(cfg):
+        loc = cfg.write_locality if locality is None else locality
+        write_chunks = np.asarray(jax.vmap(
+            lambda k: acs.draw_write_chunks(
+                k, cfg.n_agents, acs.content_chunks(cfg), loc))(keys),
+            bool)
     return Trace(acts=np.asarray(acts, bool),
                  arts=np.asarray(arts, np.int32),
-                 writes=np.asarray(writes, bool))
+                 writes=np.asarray(writes, bool),
+                 write_chunks=write_chunks)
 
 
 def _actions(trace: Trace):
@@ -197,13 +224,17 @@ def replay_protocol(cfg: acs.ACSConfig, trace: Trace):
 
 
 def replay_vectorized(cfg: acs.ACSConfig, trace: Trace):
+    content = acs.content_enabled(cfg)
     arrays = acs.init_arrays(cfg)
     met = acs.init_metrics()
-    for _, a, d, is_write in _actions(trace):
+    for s, a, d, is_write in _actions(trace):
         arrays = arrays._replace(
             agent_actions=arrays.agent_actions.at[a].add(1))
         if is_write:
-            arrays, met = acs._do_write(cfg, arrays, met, a, d)
+            wchunks = (jnp.asarray(trace.write_chunks[s, a])
+                       if content else None)
+            arrays, met = acs._do_write(cfg, arrays, met, a, d,
+                                        wchunks=wchunks)
         else:
             arrays, met = acs._do_read(cfg, arrays, met, a, d)
     ledger = Ledger(
@@ -236,7 +267,7 @@ def replay_pallas(cfg: acs.ACSConfig, trace: Trace):
         a = jnp.asarray(trace.acts[s][None], jnp.int32)
         d = jnp.asarray(trace.arts[s][None], jnp.int32)
         w = jnp.asarray(trace.writes[s][None], jnp.int32)
-        state, version, sync, reads, cnt = mesi_tick_pallas(
+        state, version, sync, reads, cnt, _ = mesi_tick_pallas(
             state, version, sync, reads, a, d, w,
             artifact_tokens=cfg.artifact_tokens,
             eager=cfg.strategy == acs.EAGER,
@@ -405,6 +436,326 @@ def check_trace(cfg: acs.ACSConfig, trace: Trace, *,
         strategy=acs.STRATEGY_NAMES[cfg.strategy],
         trace=trace, ledger=led_vec, state=st_vec, version=ver_vec,
         last_sync=sync_vec, implementations=tuple(implementations))
+
+
+# ---------------------------------------------------------------------------
+# Content plane: byte-exact differential harness (chunk-granular delta
+# coherence, ``repro.content``).
+
+
+@dataclasses.dataclass(frozen=True)
+class ByteLedger:
+    """Bytes-on-wire ledger of the chunk content plane (exact ints)."""
+
+    delta_bytes: int        # shipped under delta coherence
+    full_bytes: int         # what whole-artifact lazy ships, same fills
+    n_chunks_fetched: int
+
+    @property
+    def savings_vs_full(self) -> float:
+        return 1.0 - self.delta_bytes / max(self.full_bytes, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FillEvent:
+    """One coherence fill as the content plane served it."""
+
+    step: int
+    agent: int
+    artifact: int
+    fetched: np.ndarray      # (C,) bool chunks shipped
+    sync_before: np.ndarray  # (C,) reader chunk vector before the fill
+    dirty: np.ndarray        # (C,) dirty bitmap at fill time
+    delta_inc: int           # bytes this fill shipped
+    full_inc: int            # bytes whole-artifact lazy would ship
+
+
+@dataclasses.dataclass(frozen=True)
+class ContentReport:
+    """Agreed-upon content-plane results (post-assertion)."""
+
+    workload: str
+    strategy: str
+    trace: Trace
+    ledger: ByteLedger
+    chunk_version: np.ndarray  # (m, C)
+    chunk_sync: np.ndarray     # (n, m, C)
+    chunk_dirty: np.ndarray    # (m, C)
+    fills: tuple               # FillEvent per coherence fill
+    implementations: tuple
+
+
+def _content_cfg_check(cfg: acs.ACSConfig) -> None:
+    if not acs.content_enabled(cfg):
+        raise ValueError("content harness needs cfg.chunk_tokens > 0")
+    if cfg.strategy not in acs.CONTENT_STRATEGIES:
+        raise ValueError(
+            f"content plane covers "
+            f"{[acs.STRATEGY_NAMES[s] for s in acs.CONTENT_STRATEGIES]},"
+            f" got {acs.STRATEGY_NAMES[cfg.strategy]}")
+    if cfg.max_stale_steps > 0:
+        raise ValueError("content harness runs with max_stale_steps=0")
+
+
+def replay_content_vectorized(cfg: acs.ACSConfig, trace: Trace):
+    """Eager replay of the content plane through the production
+    ``acs._do_read`` / ``_do_write`` bodies.
+
+    Returns ``(ByteLedger, chunk_version, chunk_sync, chunk_dirty,
+    fills)`` where ``fills`` carries per-fill byte increments and the
+    dirty bitmap snapshot (the delta-subset-of-dirty property surface).
+    """
+    _content_cfg_check(cfg)
+    arrays = acs.init_arrays(cfg)
+    met = acs.init_metrics()
+    fills = []
+    for s, a, d, is_write in _actions(trace):
+        arrays = arrays._replace(
+            agent_actions=arrays.agent_actions.at[a].add(1))
+        ver_b = np.asarray(arrays.chunk_version[d], np.int32)
+        sync_b = np.asarray(arrays.chunk_sync[a, d], np.int32)
+        dirty_b = np.asarray(arrays.chunk_dirty[d], np.int32)
+        before = (int(met.n_fetches), int(met.delta_bytes),
+                  int(met.full_bytes))
+        if is_write:
+            arrays, met = acs._do_write(
+                cfg, arrays, met, a, d,
+                wchunks=jnp.asarray(trace.write_chunks[s, a]))
+        else:
+            arrays, met = acs._do_read(cfg, arrays, met, a, d)
+        if int(met.n_fetches) > before[0]:
+            fills.append(FillEvent(
+                step=s, agent=a, artifact=d,
+                fetched=ver_b > sync_b,
+                sync_before=sync_b, dirty=dirty_b.astype(bool),
+                delta_inc=int(met.delta_bytes) - before[1],
+                full_inc=int(met.full_bytes) - before[2]))
+    ledger = ByteLedger(
+        delta_bytes=int(met.delta_bytes),
+        full_bytes=int(met.full_bytes),
+        n_chunks_fetched=int(met.n_chunks_fetched))
+    return (ledger, np.asarray(arrays.chunk_version, np.int32),
+            np.asarray(arrays.chunk_sync, np.int32),
+            np.asarray(arrays.chunk_dirty, np.int32), tuple(fills))
+
+
+def replay_content_pallas(cfg: acs.ACSConfig, trace: Trace):
+    """Replay through the Pallas route: ``mesi_tick_pallas`` (per-agent
+    miss output) chased by ``chunk_tick_pallas``, batch of one sim."""
+    from repro.kernels.chunk_diff import chunk_tick_pallas
+    _content_cfg_check(cfg)
+    n, m = cfg.n_agents, cfg.n_artifacts
+    C = acs.content_chunks(cfg)
+    state = jnp.full((1, n, m), _I, jnp.int32)
+    version = jnp.ones((1, m), jnp.int32)
+    sync = jnp.zeros((1, n, m), jnp.int32)
+    reads = jnp.zeros((1, n, m), jnp.int32)
+    cv = jnp.ones((1, m, C), jnp.int32)
+    cs = jnp.zeros((1, n, m, C), jnp.int32)
+    dirty = jnp.zeros((1, m, C), jnp.int32)
+    counters = np.zeros(4, np.int64)
+    for s in range(trace.acts.shape[0]):
+        a = jnp.asarray(trace.acts[s][None], jnp.int32)
+        d = jnp.asarray(trace.arts[s][None], jnp.int32)
+        w = jnp.asarray(trace.writes[s][None], jnp.int32)
+        state, version, sync, reads, _, miss = mesi_tick_pallas(
+            state, version, sync, reads, a, d, w,
+            artifact_tokens=cfg.artifact_tokens,
+            access_k=(cfg.access_k
+                      if cfg.strategy == acs.ACCESS_COUNT else 0),
+            signal_tokens=acs.SIGNAL_TOKENS)
+        cv, cs, dirty, _, ccnt = chunk_tick_pallas(
+            cv, cs, dirty, miss, a * w, d,
+            jnp.asarray(trace.write_chunks[s][None], jnp.int32),
+            artifact_tokens=cfg.artifact_tokens,
+            chunk_tokens=cfg.chunk_tokens,
+            signal_tokens=acs.SIGNAL_TOKENS)
+        counters += np.asarray(ccnt[0], np.int64)
+    ledger = ByteLedger(delta_bytes=int(counters[0]),
+                        full_bytes=int(counters[1]),
+                        n_chunks_fetched=int(counters[2]))
+    return (ledger, np.asarray(cv[0], np.int32),
+            np.asarray(cs[0], np.int32), np.asarray(dirty[0], np.int32))
+
+
+def replay_content_store(cfg: acs.ACSConfig, trace: Trace, fills):
+    """Message-level content leg with REAL payloads: a content-addressed
+    :class:`repro.content.ChunkStore` over the canonical
+    ``ArtifactStore``, per-reader chunk caches patched by shipped
+    deltas.
+
+    ``fills`` is the serialized miss sequence (from
+    :func:`replay_content_vectorized`) - this leg does not re-decide
+    MESI, it *serves content* for the decided fills and proves the
+    bytes the vectorized ledger charged are exactly the bytes real
+    chunks occupy, and that every patched reader copy reassembles to
+    the authority artifact byte-for-byte.
+
+    Returns ``(ByteLedger, n_reassembly_checks)``.
+    """
+    from repro.content.chunks import (BYTES_PER_TOKEN, ChunkStore,
+                                      reassemble)
+    _content_cfg_check(cfg)
+    n, m, C = cfg.n_agents, cfg.n_artifacts, acs.content_chunks(cfg)
+    store = ArtifactStore()
+    chunks = ChunkStore(store, cfg.chunk_tokens)
+    for d in range(m):
+        store.put(f"artifact-{d}",
+                  [(d * 1009 + i) % 65521 for i in
+                   range(cfg.artifact_tokens)])
+        chunks.register(f"artifact-{d}")
+    cv = np.ones((m, C), np.int64)
+    cs = np.zeros((n, m, C), np.int64)
+    reader = {}   # (a, d) -> list of chunk payloads (stale allowed)
+    fill_iter = iter(fills)
+    next_fill = next(fill_iter, None)
+    delta_bytes = full_bytes = n_chunks_fetched = 0
+    n_checks = 0
+    write_counter = 0
+    for s, a, d, is_write in _actions(trace):
+        name = f"artifact-{d}"
+        is_miss = (next_fill is not None and next_fill.step == s
+                   and next_fill.agent == a)
+        if is_miss:
+            stale = np.flatnonzero(cv[d] > cs[a, d])
+            payload = chunks.delta(name, stale)
+            base = reader.get((a, d))
+            if base is None:
+                base = [None] * C
+            for idx, chunk in payload:
+                base[idx] = chunk
+            reader[(a, d)] = base
+            shipped = sum(len(chunk) for _, chunk in payload)
+            delta_bytes += (shipped + acs.SIGNAL_TOKENS) * BYTES_PER_TOKEN
+            full_bytes += (cfg.artifact_tokens
+                           + acs.SIGNAL_TOKENS) * BYTES_PER_TOKEN
+            n_chunks_fetched += len(stale)
+            cs[a, d] = cv[d]
+            got = reassemble(base)
+            want = tuple(store.get(name))
+            if got != want:
+                raise ConformanceError(
+                    f"reassembled copy of {name} at agent {a} (step {s})"
+                    f" diverged from the authority artifact")
+            n_checks += 1
+            next_fill = next(fill_iter, None)
+        if is_write:
+            span = np.flatnonzero(trace.write_chunks[s, a])
+            new_content = list(store.get(name))
+            write_counter += 1
+            ct = cfg.chunk_tokens
+            for c in span:
+                lo = c * ct
+                hi = min(lo + ct, cfg.artifact_tokens)
+                for i in range(lo, hi):
+                    # unique value per commit: every spanned chunk's
+                    # digest is guaranteed to move
+                    new_content[i] = 100000 + write_counter
+            measured = chunks.put(name, new_content)
+            if not np.array_equal(np.flatnonzero(measured), span):
+                raise ConformanceError(
+                    f"measured content diff {np.flatnonzero(measured)} "
+                    f"!= sampled span {span} (step {s}, agent {a})")
+            cv[d][span] += 1
+            reader[(a, d)] = [chunks.chunk(name, i) for i in range(C)]
+            cs[a, d] = cv[d]
+    ledger = ByteLedger(delta_bytes=delta_bytes, full_bytes=full_bytes,
+                        n_chunks_fetched=n_chunks_fetched)
+    return ledger, n_checks
+
+
+def check_content_trace(cfg: acs.ACSConfig, trace: Trace, *,
+                        name: str = "trace",
+                        context: str | None = None) -> ContentReport:
+    """Byte-exact differential leg of the oracle.
+
+    Replays one (possibly service-captured) trace through the chunked
+    scan path, the Pallas chunk-diff route, the real-payload chunk
+    store, and the message-level whole-artifact baseline, asserting:
+
+      * bit-identical byte ledgers and chunk state across scan and
+        Pallas backends;
+      * the real-payload leg charges exactly the same bytes and every
+        patched reader copy reassembles to the authority artifact;
+      * the whole-artifact baseline (the message-level protocol's
+        token ledger, in bytes) equals the ``full_bytes`` column - so
+        ``delta <= full`` is measured against the actual baseline;
+      * ``delta_inc <= full_inc`` for every individual fill.
+    """
+    from repro.content.chunks import BYTES_PER_TOKEN
+    _content_cfg_check(cfg)
+    if trace.write_chunks is None:
+        raise ValueError("content check needs trace.write_chunks")
+    ctx = context or f"content trace {name!r}"
+
+    led_vec, cv_vec, cs_vec, dirty_vec, fills = \
+        replay_content_vectorized(cfg, trace)
+    led_pal, cv_pal, cs_pal, dirty_pal = replay_content_pallas(cfg, trace)
+
+    for field in dataclasses.fields(ByteLedger):
+        _expect(f"byte ledger.{field.name} (pallas vs vectorized)",
+                getattr(led_pal, field.name),
+                getattr(led_vec, field.name), ctx)
+    _expect("chunk_version (pallas vs vectorized)", cv_pal, cv_vec, ctx)
+    _expect("chunk_sync (pallas vs vectorized)", cs_pal, cs_vec, ctx)
+    _expect("chunk_dirty (pallas vs vectorized)", dirty_pal, dirty_vec,
+            ctx)
+
+    led_store, n_checks = replay_content_store(cfg, trace, fills)
+    for field in dataclasses.fields(ByteLedger):
+        _expect(f"byte ledger.{field.name} (chunk store vs vectorized)",
+                getattr(led_store, field.name),
+                getattr(led_vec, field.name), ctx)
+
+    # whole-artifact baseline: the message-level protocol's fetch
+    # ledger, converted to wire bytes, IS the full_bytes column.
+    led_pro, _, _, _ = replay_protocol(cfg, trace)
+    _expect("full_bytes vs whole-artifact protocol fetch bytes",
+            led_vec.full_bytes,
+            led_pro.fetch_tokens * BYTES_PER_TOKEN, ctx)
+
+    for f in fills:
+        if f.delta_inc > f.full_inc:
+            raise ConformanceError(
+                f"{ctx}: fill (step {f.step}, agent {f.agent}, artifact"
+                f" {f.artifact}) shipped {f.delta_inc} delta bytes > "
+                f"{f.full_inc} whole-artifact bytes")
+    if led_vec.delta_bytes > led_vec.full_bytes:
+        raise ConformanceError(
+            f"{ctx}: total delta {led_vec.delta_bytes} > full "
+            f"{led_vec.full_bytes}")
+
+    return ContentReport(
+        workload=name, strategy=acs.STRATEGY_NAMES[cfg.strategy],
+        trace=trace, ledger=led_vec, chunk_version=cv_vec,
+        chunk_sync=cs_vec, chunk_dirty=dirty_vec, fills=fills,
+        implementations=("vectorized", "pallas", "chunk_store",
+                         "protocol_baseline"))
+
+
+def content_differential_check(workload, run: int = 0) -> ContentReport:
+    """Sample one engine-schedule trace of a chunked workload and run
+    the byte-exact harness, then close the loop against the fused
+    tensor path's own byte ledger."""
+    cfg = workload.acs
+    rates = workload.rates() if hasattr(workload, "rates") else None
+    locality = getattr(workload, "write_locality", cfg.write_locality)
+    key = episode_key(workload.seed, run)
+    trace = sample_trace(cfg, key, rates, locality=locality)
+    ctx = f"content workload {workload.name!r} run {run}"
+    report = check_content_trace(cfg, trace, name=workload.name,
+                                 context=ctx)
+    met = acs.run_episode(cfg, key, rates=rates, locality=locality)
+    _expect("run_episode delta_bytes vs replay",
+            int(met.delta_bytes), report.ledger.delta_bytes, ctx)
+    _expect("run_episode full_bytes vs replay",
+            int(met.full_bytes), report.ledger.full_bytes, ctx)
+    _expect("run_episode n_chunks_fetched vs replay",
+            int(met.n_chunks_fetched), report.ledger.n_chunks_fetched,
+            ctx)
+    return dataclasses.replace(
+        report,
+        implementations=report.implementations + ("run_episode",))
 
 
 def differential_check(workload, run: int = 0,

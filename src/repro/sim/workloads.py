@@ -74,6 +74,11 @@ class Workload:
     seed: int
     n_runs: int = 10
     description: str = ""
+    #: fraction of an artifact's chunks one write dirties (the content
+    #: plane's sampled span length; see ``acs.draw_write_chunks``).  A
+    #: *traced* axis of the fused engine, like the rate tensors - only
+    #: meaningful when the workload's config enables ``chunk_tokens``.
+    write_locality: float = 1.0
 
     def __post_init__(self):
         n, m = self.acs.n_agents, self.acs.n_artifacts
@@ -120,6 +125,27 @@ class Workload:
         return dataclasses.replace(
             self, acs=dataclasses.replace(self.acs, **acs_overrides))
 
+    def with_volatility(self, volatility: float) -> "Workload":
+        """Rescale the write-rate tensor so ``effective_volatility()``
+        hits ``volatility`` while preserving the family's *structure*
+        (who writes what stays fixed; only how often changes).  Rates
+        clip at 1, so the realized volatility can undershoot for
+        extreme targets on saturated families - callers sweeping V use
+        ``effective_volatility()`` of the result as the realized
+        axis value."""
+        eff = self.effective_volatility()
+        if eff <= 0:
+            raise ValueError(
+                f"workload {self.name!r} has zero effective volatility;"
+                f" cannot rescale to {volatility}")
+        scaled = np.clip(np.asarray(self.write_rate, np.float64)
+                         * (volatility / eff), 0.0, 1.0)
+        return dataclasses.replace(self, write_rate=scaled)
+
+    def with_locality(self, write_locality: float) -> "Workload":
+        return dataclasses.replace(self,
+                                   write_locality=float(write_locality))
+
 
 # ---------------------------------------------------------------------------
 # Shared structure helpers.
@@ -150,7 +176,8 @@ def _base_cfg(n_agents: int, n_artifacts: int, **overrides) -> ACSConfig:
 
 def bursty(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
            n_runs: int = 10, n_writers: int = 2, hot_rate: float = 0.9,
-           cold_rate: float = 0.02, **cfg) -> Workload:
+           cold_rate: float = 0.02, write_locality: float = 0.25,
+           **cfg) -> Workload:
     """A small clique of hot writers; the rest of the fleet reads."""
     n, m = n_agents, n_artifacts
     wr = np.full((n, m), cold_rate)
@@ -161,14 +188,14 @@ def bursty(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
         name=f"bursty w={n_writers}", family="bursty",
         acs=_base_cfg(n, m, **cfg), p_act=p_act,
         pick=_uniform_rows(n, m), write_rate=wr, seed=seed,
-        n_runs=n_runs,
+        n_runs=n_runs, write_locality=write_locality,
         description=f"{n_writers} agents carry ~all writes at "
                     f"rate {hot_rate}; others read at {cold_rate}.")
 
 
 def zipf(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
          n_runs: int = 10, skew: float = 1.2, volatility: float = 0.15,
-         **cfg) -> Workload:
+         write_locality: float = 0.4, **cfg) -> Workload:
     """Hot/cold artifact skew: Zipf(s) selection, uniform write rate."""
     n, m = n_agents, n_artifacts
     pick = np.tile(zipf_weights(m, skew), (n, 1))
@@ -176,14 +203,15 @@ def zipf(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
         name=f"zipf s={skew}", family="zipf",
         acs=_base_cfg(n, m, **cfg), p_act=np.full(n, 0.75),
         pick=pick, write_rate=np.full((n, m), volatility), seed=seed,
-        n_runs=n_runs,
+        n_runs=n_runs, write_locality=write_locality,
         description=f"Zipf({skew}) artifact selection, uniform "
                     f"V={volatility}.")
 
 
 def hierarchical(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
                  n_runs: int = 10, plan_write: float = 0.35,
-                 out_write: float = 0.55, **cfg) -> Workload:
+                 out_write: float = 0.55,
+                 write_locality: float = 0.2, **cfg) -> Workload:
     """Planner/worker team: agent 0 rewrites the plan (artifact 0) and
     monitors outputs; workers read the plan and write their own output
     artifact (1 + (a-1) mod (m-1))."""
@@ -205,13 +233,15 @@ def hierarchical(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
         name="hierarchical", family="hierarchical",
         acs=_base_cfg(n, m, **cfg), p_act=np.full(n, 0.8),
         pick=pick, write_rate=wr, seed=seed, n_runs=n_runs,
+        write_locality=write_locality,
         description="1 planner rewriting the plan; workers read plan, "
                     "write private outputs.")
 
 
 def rag(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
         n_runs: int = 10, skew: float = 1.1, read_write: float = 0.01,
-        refresh_write: float = 0.25, **cfg) -> Workload:
+        refresh_write: float = 0.25, write_locality: float = 0.1,
+        **cfg) -> Workload:
     """Read-heavy retrieval: everyone reads Zipf-hot corpus shards;
     one index-refresher agent occasionally rewrites the hot shards."""
     n, m = n_agents, n_artifacts
@@ -223,12 +253,13 @@ def rag(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
         name="rag read-heavy", family="rag",
         acs=_base_cfg(n, m, **cfg), p_act=np.full(n, 0.85),
         pick=pick, write_rate=wr, seed=seed, n_runs=n_runs,
+        write_locality=write_locality,
         description="near-zero write rates except one index refresher.")
 
 
 def pipeline(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
              n_runs: int = 10, produce_rate: float = 0.7,
-             **cfg) -> Workload:
+             write_locality: float = 0.5, **cfg) -> Workload:
     """Pipeline-DAG handoff: stage i consumes artifact i mod m and
     produces artifact (i+1) mod m."""
     n, m = n_agents, n_artifacts
@@ -246,12 +277,13 @@ def pipeline(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
         name="pipeline dag", family="pipeline",
         acs=_base_cfg(n, m, **cfg), p_act=np.full(n, 0.75),
         pick=pick, write_rate=wr, seed=seed, n_runs=n_runs,
+        write_locality=write_locality,
         description="stage i reads artifact i, writes artifact i+1.")
 
 
 def ping_pong(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
               n_runs: int = 10, spectator_focus: float = 0.7,
-              **cfg) -> Workload:
+              write_locality: float = 0.15, **cfg) -> Workload:
     """Adversarial write ping-pong: two agents write the same contended
     artifact every action; spectators keep trying to read it.  The
     worst case for invalidation protocols - every write invalidates
@@ -275,6 +307,7 @@ def ping_pong(n_agents: int = 8, n_artifacts: int = 6, seed: int = 0,
         name="write ping-pong", family="ping_pong",
         acs=_base_cfg(n, m, **cfg), p_act=p_act,
         pick=pick, write_rate=wr, seed=seed, n_runs=n_runs,
+        write_locality=write_locality,
         description="2 agents alternate writes to one hot artifact; "
                     "spectators read it.")
 
@@ -327,4 +360,5 @@ def random_workload(seed: int, n_agents: int = 4, n_artifacts: int = 3,
         pick=rng.dirichlet(np.ones(m), size=n),
         write_rate=rng.uniform(0.0, 1.0, (n, m)),
         seed=seed, n_runs=n_runs,
+        write_locality=float(rng.uniform(0.05, 1.0)),
         description="random rates (hypothesis property tests).")

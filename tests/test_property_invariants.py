@@ -177,3 +177,80 @@ def test_coherent_never_exceeds_broadcast(seed):
     _, met_b, _ = run_arrays(
         dataclasses.replace(cfg, strategy=acs.BROADCAST), seed)
     assert float(met.total_tokens) <= float(met_b.total_tokens)
+
+
+# ---------------------------------------------------------------------------
+# Content plane (chunk-granular delta coherence, ``repro.content``).
+
+
+@pytest.mark.content
+@given(seed=st.integers(0, 2**16),
+       n_tokens=st.integers(1, 200), chunk_tokens=st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_chunk_reassembly_identity(seed, n_tokens, chunk_tokens):
+    """split -> reassemble is the identity for every geometry,
+    ragged last chunk included."""
+    from repro.content.chunks import (chunk_sizes, n_chunks, reassemble,
+                                      split_chunks)
+    rng_ = np.random.default_rng(seed)
+    content = rng_.integers(0, 10000, n_tokens).tolist()
+    chunks = split_chunks(content, chunk_tokens)
+    sizes = chunk_sizes(n_tokens, chunk_tokens)
+    assert len(chunks) == n_chunks(n_tokens, chunk_tokens)
+    assert [len(c) for c in chunks] == sizes.tolist()
+    assert reassemble(chunks) == tuple(content)
+
+
+def _content_replay(wl_seed, seed, locality, chunk_tokens=16,
+                    strategy=acs.LAZY):
+    from repro.sim import oracle
+    w = workloads.random_workload(
+        wl_seed, n_agents=3, n_artifacts=2, artifact_tokens=48,
+        n_steps=8, strategy=strategy,
+        chunk_tokens=chunk_tokens).with_locality(locality)
+    key = oracle.episode_key(seed, 0)
+    trace = oracle.sample_trace(w.acs, key, w.rates(),
+                                locality=w.write_locality)
+    return w, trace, oracle.replay_content_vectorized(w.acs, trace)
+
+
+@pytest.mark.content
+@given(wl_seed=st.integers(0, 2**10), seed=st.integers(0, 2**16),
+       locality=st.floats(0.05, 1.0))
+@settings(max_examples=10, deadline=None)
+def test_dirty_bitmap_monotone_and_delta_bounded(wl_seed, seed,
+                                                 locality):
+    """On arbitrary rate matrices: (1) the dirty bitmap only grows
+    under writes, (2) every fill ships delta <= whole-artifact bytes,
+    (3) total delta <= total full."""
+    w, trace, (ledger, _, _, dirty_final, fills) = _content_replay(
+        wl_seed, seed, locality)
+    # dirty snapshots on one artifact, in serialization order, only grow
+    last = {}
+    for f in fills:
+        prev = last.get(f.artifact)
+        if prev is not None:
+            assert (prev <= f.dirty).all(), "dirty bitmap shrank"
+        last[f.artifact] = f.dirty
+        assert f.delta_inc <= f.full_inc
+    assert ledger.delta_bytes <= ledger.full_bytes
+    # final bitmap dominates every snapshot seen on that artifact
+    for f in fills:
+        assert (f.dirty <= dirty_final[f.artifact].astype(bool)).all()
+
+
+@pytest.mark.content
+@given(wl_seed=st.integers(0, 2**10), seed=st.integers(0, 2**16),
+       locality=st.floats(0.05, 0.9))
+@settings(max_examples=10, deadline=None)
+def test_delta_fetch_subset_of_dirty(wl_seed, seed, locality):
+    """Invariant: a re-fetch (reader already synced once, so
+    ``sync_before > 0`` everywhere) ships only chunks some write
+    dirtied - the delta set is a subset of the dirty bitmap."""
+    _, _, (_, _, _, _, fills) = _content_replay(wl_seed, seed, locality)
+    for f in fills:
+        if (f.sync_before > 0).all():      # not a cold fill
+            fetched = np.asarray(f.fetched, bool)
+            assert (fetched <= f.dirty).all(), (
+                f"delta fetch shipped never-written chunks: "
+                f"{fetched} vs dirty {f.dirty}")

@@ -142,6 +142,23 @@ class TestBitExactness:
                            compare_workloads(zoo, devices=1)):
             self._assert_same(sh, ref)
 
+    @pytest.mark.content
+    def test_content_grid_byte_ledgers_shard_exactly(self):
+        """The chunked grid (extra traced locality operand + chunk
+        state in the carry) stays bit-identical under sharding - byte
+        ledgers included."""
+        zoo = [w.with_overrides(chunk_tokens=16)
+               for w in _zoo(n_runs=N_DEV)]
+        for sh, ref in zip(compare_workloads(zoo, devices=N_DEV),
+                           compare_workloads(zoo, devices=1)):
+            self._assert_same(sh, ref)
+            assert (sh.coherent.delta_bytes_mean
+                    == ref.coherent.delta_bytes_mean)
+            assert (sh.coherent.full_bytes_mean
+                    == ref.coherent.full_bytes_mean)
+            assert (sh.coherent.n_chunks_fetched_mean
+                    == ref.coherent.n_chunks_fetched_mean)
+
     def test_workloads_axis_fallback_path(self):
         # 6 zoo families with a run count that does not divide: on 2,
         # 3 or 6 devices the planner shards the workload axis instead.
