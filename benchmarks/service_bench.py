@@ -11,14 +11,24 @@ and its captured decision trace must replay **bit-exactly** through
 the four-way differential oracle (protocol / vectorized ACS / Pallas
 kernel / model checker).
 
-Writes ``BENCH_service.json`` at the repo root (schema in
-``benchmarks/README.md``) so service latency/savings are tracked and
-perf-gated across PRs (``scripts/bench_gate.py``).
+The sharded section re-runs every family on the K=4 authority plane
+(4 directory shards, 4 L1 hosts, via the topology-neutral
+``service.connect``) and asserts the token ledger is **bit-identical**
+to the plain broker's - sharding is a deployment knob, not a semantics
+knob - then sweeps K in {1, 2, 4} on the uniform family to show
+decision-plane *capacity* (actions / max-over-shards decide-busy, the
+makespan metric from ``LoadReport.capacity_dps``) scaling with K at
+unchanged savings.
+
+Writes ``BENCH_service.json`` at the repo root (schema v3 in
+``benchmarks/README.md``) so service latency/savings/capacity are
+tracked and perf-gated across PRs (``scripts/bench_gate.py``).
 """
 
 from __future__ import annotations
 
 import asyncio
+import dataclasses
 import json
 import pathlib
 
@@ -26,10 +36,9 @@ import jax
 
 from benchmarks.common import (BenchRow, bench_steps, fast_mode, fmt_pct,
                                md_table, write_results)
-from repro.service import (BrokerConfig, CoherenceBroker, drive_workload,
-                           verify_broker)
+from repro.service import (BrokerConfig, CoherenceBroker, CoherenceConfig,
+                           connect, drive_workload, verify_broker)
 from repro.service.batching import resolve_decide_backend
-from repro.sim import workloads
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 BENCH_JSON = REPO_ROOT / "BENCH_service.json"
@@ -42,6 +51,11 @@ N_ROUNDS = 40
 ARTIFACT_TOKENS = 4096
 STRATEGY = "lazy"
 MIN_ACCEPT_SAVINGS = 0.80
+
+#: sharded authority plane: K values for the uniform capacity sweep and
+#: the per-family bit-identity pass (always at SHARD_KS[-1]).
+SHARD_KS = (1, 2, 4)
+N_HOSTS = 4
 
 #: benchmark families: the acceptance row plus the structured zoo.
 FAMILIES = ("uniform", "bursty", "zipf", "hierarchical", "rag",
@@ -64,8 +78,17 @@ def _broker_config() -> BrokerConfig:
         artifact_tokens=ARTIFACT_TOKENS, strategy=STRATEGY)
 
 
+def _coherence_config(shards: int) -> CoherenceConfig:
+    """Layered config for the sharded rows: K directory shards, N_HOSTS
+    L1 placement domains, same core knobs as the plain rows."""
+    return CoherenceConfig.make(
+        N_CLIENTS, tuple(f"artifact-{d}" for d in range(N_ARTIFACTS)),
+        artifact_tokens=ARTIFACT_TOKENS, strategy=STRATEGY,
+        shards=shards, hosts=N_HOSTS)
+
+
 async def _measure_family(family: str, n_rounds: int,
-                          verify: bool) -> dict:
+                          keep_broker: bool = False) -> tuple:
     w = _workload(family, n_rounds)
     async with CoherenceBroker(_broker_config()) as broker:
         rep = await drive_workload(broker, w, n_rounds,
@@ -87,23 +110,69 @@ async def _measure_family(family: str, n_rounds: int,
             "savings_vs_broadcast": rep.savings_vs_broadcast,
             "cache_hit_rate": stats["cache_hit_rate"],
         }
-        if verify:
-            report = verify_broker(broker, name=f"service:{family}")
-            row["oracle_replay"] = {
-                "bit_exact": True,
-                "implementations": list(report.implementations),
-                "n_actions": report.trace.n_actions,
-            }
-        return row
+        return (row, dataclasses.astuple(broker.ledger),
+                broker if keep_broker else None)
+
+
+async def _measure_sharded(family: str, n_rounds: int, shards: int,
+                           plain_ledger: tuple,
+                           keep_broker: bool = False) -> tuple:
+    """One family on the K-shard authority plane via ``connect``.
+
+    Asserts the token ledger is bit-identical to the plain broker's run
+    of the same workload (sharding must not change a single accounting
+    bit) and reports the capacity metric + L1/L2 fill split."""
+    w = _workload(family, n_rounds)
+    async with connect(_coherence_config(shards)) as broker:
+        rep = await drive_workload(broker, w, n_rounds,
+                                   seed=FAMILY_SEEDS[family])
+        stats = broker.stats()
+        ledger = dataclasses.astuple(broker.ledger)
+        if ledger != plain_ledger:
+            raise AssertionError(
+                f"sharded K={shards} {family}: ledger diverged from the "
+                f"plain broker ({ledger} vs {plain_ledger})")
+        row = {
+            "family": family,
+            "shards": shards,
+            "hosts": N_HOSTS,
+            "actions": rep.n_actions,
+            "coherent_tokens": rep.coherent_tokens,
+            "savings_vs_broadcast": rep.savings_vs_broadcast,
+            "capacity_dps": rep.capacity_dps,
+            "decide_busy_s": list(rep.decide_busy_s),
+            "l1_fills": stats.get("l1_fills", 0),
+            "l2_fills": stats.get("l2_fills", 0),
+            "l1_fill_rate": stats.get("l1_fill_rate", 0.0),
+            "bit_identical_to_plain": True,
+        }
+        return row, broker if keep_broker else None
 
 
 async def _warmup() -> None:
-    """Compile the decision program outside the timed runs (the jit
-    cache is keyed on the static broker config, so the measured brokers
-    reuse it)."""
+    """Compile the plain decision program outside the timed runs (the
+    jit cache is keyed on the static broker config, so the measured
+    brokers reuse it)."""
     w = _workload("uniform", 2)
     async with CoherenceBroker(_broker_config()) as broker:
         await drive_workload(broker, w, 2, seed=0)
+
+
+async def _warmup_sharded(shards: int) -> None:
+    """Per-K warmup: each shard decides over its own artifact subset -
+    a different static shape, so a separate jit-cache entry."""
+    w = _workload("uniform", 2)
+    async with connect(_coherence_config(shards)) as broker:
+        await drive_workload(broker, w, 2, seed=0)
+
+
+def _oracle_row(broker, name: str) -> dict:
+    report = verify_broker(broker, name=name)
+    return {
+        "bit_exact": True,
+        "implementations": list(report.implementations),
+        "n_actions": report.trace.n_actions,
+    }
 
 
 def run() -> list:
@@ -112,10 +181,54 @@ def run() -> list:
     decide_backend = resolve_decide_backend(cfg.acs_config())
     asyncio.run(_warmup())
 
-    rows_payload = []
+    rows_payload, plain_ledgers = [], {}
+    uniform_broker = None
     for family in FAMILIES:
-        rows_payload.append(asyncio.run(_measure_family(
-            family, n_rounds, verify=(family == "uniform"))))
+        row, ledger, broker = asyncio.run(_measure_family(
+            family, n_rounds, keep_broker=(family == "uniform")))
+        rows_payload.append(row)
+        plain_ledgers[family] = ledger
+        uniform_broker = uniform_broker or broker
+
+    # sharded plane: every family at K=SHARD_KS[-1] must be
+    # bit-identical to its plain run (asserted inside), the uniform
+    # family additionally sweeps K for the capacity-scaling rows.
+    # Caches are cleared between sections: a full run compiles the
+    # plain program + one decide program per shard shape + the oracle
+    # replay legs, which together can exhaust the CPU LLVM code arena
+    # in one process (same reason tests/conftest.py clears caches
+    # between modules).  Each section re-warms its own programs, so
+    # the timed rows never include a compile.
+    k_max = SHARD_KS[-1]
+    jax.clear_caches()
+    asyncio.run(_warmup_sharded(k_max))
+    sharded_rows, sharded_uniform_broker = [], None
+    for family in FAMILIES:
+        row, broker = asyncio.run(_measure_sharded(
+            family, n_rounds, k_max, plain_ledgers[family],
+            keep_broker=(family == "uniform")))
+        sharded_rows.append(row)
+        sharded_uniform_broker = sharded_uniform_broker or broker
+    scaling_rows = []
+    for k in SHARD_KS:
+        if k == k_max:
+            continue
+        jax.clear_caches()
+        asyncio.run(_warmup_sharded(k))
+        scaling_rows.append(asyncio.run(_measure_sharded(
+            "uniform", n_rounds, k, plain_ledgers["uniform"]))[0])
+    scaling_rows.append(sharded_rows[0])
+    scaling_rows.sort(key=lambda r: r["shards"])
+
+    # oracle replays last, each against a fresh code arena: the
+    # four-way legs (pallas interpret + model check) are the biggest
+    # compiles of the whole bench.
+    jax.clear_caches()
+    rows_payload[0]["oracle_replay"] = _oracle_row(
+        uniform_broker, "service:uniform")
+    jax.clear_caches()
+    sharded_rows[0]["oracle_replay"] = _oracle_row(
+        sharded_uniform_broker, f"service:uniform:K{k_max}")
 
     accept_row = rows_payload[0]
     assert accept_row["family"] == "uniform"
@@ -126,7 +239,7 @@ def run() -> list:
             f"{MIN_ACCEPT_SAVINGS}")
 
     payload = {
-        "schema_version": 1,
+        "schema_version": 3,
         "fast_mode": fast_mode(),
         "backend": jax.default_backend(),
         "decide_backend": decide_backend,
@@ -139,6 +252,12 @@ def run() -> list:
             "strategy": STRATEGY,
         },
         "families": rows_payload,
+        "sharded": {
+            "ks": list(SHARD_KS),
+            "n_hosts": N_HOSTS,
+            "families": sharded_rows,
+            "uniform_scaling": scaling_rows,
+        },
         "acceptance": {
             "family": "uniform",
             "volatility": 0.10,
@@ -161,6 +280,12 @@ def run() -> list:
               fmt_pct(r["savings_vs_broadcast"]),
               fmt_pct(r["cache_hit_rate"])]
              for r in rows_payload]
+    shard_table = [[f"K={r['shards']}",
+                    f"{r['capacity_dps']:,.0f}",
+                    fmt_pct(r["savings_vs_broadcast"]),
+                    str(r["l1_fills"]), str(r["l2_fills"]),
+                    fmt_pct(r["l1_fill_rate"])]
+                   for r in scaling_rows]
     accept_oracle = accept_row["oracle_replay"]
     md = ("### Coherence service - concurrent-client load benchmark\n\n"
           + md_table(["family", "eff. V", "decisions/s",
@@ -171,7 +296,16 @@ def run() -> list:
           f"{accept_row['savings_vs_broadcast']:.1%} (floor "
           f"{MIN_ACCEPT_SAVINGS:.0%}); captured trace replayed "
           f"bit-exactly through "
-          f"{', '.join(accept_oracle['implementations'])}.\n")
+          f"{', '.join(accept_oracle['implementations'])}.\n"
+          "\n### Sharded authority plane - uniform capacity sweep\n\n"
+          + md_table(["shards", "capacity dec/s", "savings",
+                      "L1 fills", "L2 fills", "L1 rate"], shard_table)
+          + f"\nK directory shards x {N_HOSTS} L1 hosts; capacity = "
+          f"actions / max-over-shards decide-busy (the decision-plane "
+          f"makespan under shard-per-host deployment).  Every family's "
+          f"K={k_max} token ledger is bit-identical to its plain-broker "
+          f"run; the uniform K={k_max} trace additionally replayed "
+          f"through the cross-shard + L1/L2 conformance legs.\n")
 
     rows = [BenchRow(
         name=f"service/{r['family']}",
@@ -179,6 +313,12 @@ def run() -> list:
         derived=(f"savings={r['savings_vs_broadcast'] * 100:.1f}% "
                  f"p99={r['p99_ms']:.2f}ms"))
         for r in rows_payload]
+    rows += [BenchRow(
+        name=f"service/uniform@K{r['shards']}",
+        us_per_call=1e6 / max(r["capacity_dps"], 1e-9),
+        derived=(f"savings={r['savings_vs_broadcast'] * 100:.1f}% "
+                 f"l1_rate={r['l1_fill_rate'] * 100:.1f}%"))
+        for r in scaling_rows]
     write_results("service_bench", rows, md, extra=payload)
     return rows
 

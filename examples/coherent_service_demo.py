@@ -10,10 +10,15 @@ layer:
   * a reviewer polls via a CrewAI-style sync tool on a
     ``ServicePortal`` background loop.
 
-At the end the captured decision trace is replayed bit-for-bit through
-the four-way differential oracle (protocol / vectorized ACS / Pallas
-kernel / model checker) - the live service and the verified simulator
-are the same machine.
+The team runs against the *sharded* authority plane - two directory
+shards, two L1 hosts - through the topology-neutral
+``service.connect(...)`` entry: nothing in the team code names the
+topology, and the token ledger is bit-identical to the single-broker
+run (oracle-enforced).  At the end the captured decision trace is
+replayed bit-for-bit through the four-way differential oracle
+(protocol / vectorized ACS / Pallas kernel / model checker), plus the
+cross-shard and L1/L2 conformance legs - the live service and the
+verified simulator are the same machine.
 
 Run:  PYTHONPATH=src python examples/coherent_service_demo.py [--smoke]
 """
@@ -23,14 +28,13 @@ from __future__ import annotations
 import argparse
 import asyncio
 
-from repro.service import (BrokerConfig, CoherenceBroker, CoherentClient,
-                           CoherentTool, ServicePortal, crewai_tool,
-                           langgraph_node, verify_broker)
+from repro.service import (CoherentClient, CoherentTool, connect,
+                           crewai_tool, langgraph_node, verify_broker)
 
 ARTIFACTS = ("plan", "result-a", "result-b")
 
 
-async def team_round(broker: CoherenceBroker, round_idx: int) -> None:
+async def team_round(broker, round_idx: int) -> None:
     planner = CoherentTool(CoherentClient(broker, 0, name="planner"))
     workers = [
         langgraph_node(CoherentClient(broker, 1, name="worker-a"),
@@ -51,7 +55,7 @@ async def team_round(broker: CoherenceBroker, round_idx: int) -> None:
         for worker, tag in zip(workers, "ab")))
 
 
-async def run_team(broker: CoherenceBroker, rounds: int) -> None:
+async def run_team(broker, rounds: int) -> None:
     for i in range(rounds):
         await team_round(broker, i)
 
@@ -61,15 +65,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny run (CI example-smoke)")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="authority shards (deployment knob only: the "
+                    "ledger is identical for any value)")
+    ap.add_argument("--hosts", type=int, default=2,
+                    help="L1 placement domains")
     args = ap.parse_args(argv)
     rounds = 4 if args.smoke else args.rounds
 
-    config = BrokerConfig(n_agents=4, artifacts=ARTIFACTS,
-                          artifact_tokens=128, strategy="lazy")
+    # topology-neutral entry: the team below never learns whether it
+    # talks to one broker or a sharded plane with host L1s.
+    artifact_tokens = 128
+    portal = connect(n_agents=4, artifacts=ARTIFACTS,
+                     artifact_tokens=artifact_tokens, strategy="lazy",
+                     shards=args.shards, hosts=args.hosts, sync=True)
 
     # async team via asyncio; then a sync reviewer via the portal,
-    # against the SAME broker instance.
-    with ServicePortal(config) as portal:
+    # against the SAME authority plane.
+    with portal:
         portal.call(run_team(portal.broker, rounds))
         reviewer = crewai_tool(portal.client(3, name="reviewer"))
         print(reviewer.run("read", "plan"))
@@ -78,9 +91,8 @@ def main(argv=None) -> dict:
 
         broker = portal.broker
         stats = broker.stats()
-        n, m = config.n_agents, len(ARTIFACTS)
-        broadcast = stats["n_batches"] * n * m * (
-            config.artifact_tokens + 12)
+        n, m = 4, len(ARTIFACTS)
+        broadcast = stats["n_batches"] * n * m * (artifact_tokens + 12)
         savings = 1.0 - stats["total_tokens"] / max(broadcast, 1)
         print(f"\n{stats['n_actions']} actions in "
               f"{stats['n_batches']} micro-batches "
@@ -88,6 +100,13 @@ def main(argv=None) -> dict:
               f"{stats['total_tokens']} tokens vs {broadcast} broadcast "
               f"= {savings:.1%} saved; "
               f"cache-hit rate {stats['cache_hit_rate']:.1%}")
+        if "n_shards" in stats:
+            print(f"authority plane: {stats['n_shards']} shards "
+                  f"(artifacts per shard {stats['shard_artifacts']}), "
+                  f"{stats['n_hosts']} L1 hosts; "
+                  f"{stats['l1_fills']} fills served host-locally vs "
+                  f"{stats['l2_fills']} from L2 "
+                  f"(L1 fill rate {stats['l1_fill_rate']:.1%})")
 
         report = verify_broker(broker, name="service:demo")
         print(f"oracle replay: bit-exact across "

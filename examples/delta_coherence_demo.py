@@ -3,8 +3,8 @@ deltas through a chunked broker.
 
 An *editor* agent keeps revising one section (chunk span) of a shared
 document artifact; a *reviewer* agent re-reads it after every revision.
-The broker runs with the chunk-granular content plane on
-(``BrokerConfig(chunk_tokens=...)``):
+The broker comes from the topology-neutral ``service.connect(...)``
+entry with the chunk-granular content plane on (``chunk_tokens=``):
 
   * every artifact is a content-addressed chunk array
     (``repro.content.ChunkStore``), so a write's dirty set is
@@ -35,9 +35,9 @@ import argparse
 import asyncio
 
 from repro.content import BYTES_PER_TOKEN, apply_delta
-from repro.service import (BrokerConfig, CoherenceBroker, CoherentClient,
-                           CoherentTool, ServicePortal, crewai_tool,
-                           verify_broker)
+from repro.service import (CoherenceBroker, CoherenceConfig,
+                           CoherentClient, CoherentTool, ServicePortal,
+                           connect, crewai_tool, verify_broker)
 
 DOC = "design-doc"
 ARTIFACT_TOKENS = 2048
@@ -87,10 +87,10 @@ def sync_reviewer_pass(portal: ServicePortal) -> None:
 
 
 async def main(n_rounds: int) -> None:
-    config = BrokerConfig(
-        n_agents=3, artifacts=(DOC,), artifact_tokens=ARTIFACT_TOKENS,
+    config = CoherenceConfig.make(
+        3, (DOC,), artifact_tokens=ARTIFACT_TOKENS,
         strategy="lazy", chunk_tokens=CHUNK_TOKENS)
-    async with CoherenceBroker(config) as broker:
+    async with connect(config) as broker:
         print(f"editor/reviewer exchanging {CHUNK_TOKENS}-token chunk "
               f"deltas over {DOC!r} ({ARTIFACT_TOKENS} tokens, "
               f"{ARTIFACT_TOKENS // CHUNK_TOKENS} chunks):")

@@ -37,6 +37,12 @@ Checks (see ``--help`` for every tolerance knob):
                within --latency-factor x baseline (cross-mode OR'd
                with the --latency-ceiling-ms pathology bound);
                decisions/s >= --throughput-floor-frac x baseline
+  sharded      every family's K-shard ledger bit-identical to its
+               plain-broker run; sharded savings within
+               --shard-savings-tol of the plain rows; decision-plane
+               capacity monotone in K (--shard-capacity-tol per step,
+               gated within the fresh payload - capacity is
+               machine-dependent)
 """
 
 from __future__ import annotations
@@ -115,7 +121,8 @@ def _run_benches() -> dict:
 
 
 def _inject(fresh: dict, throughput_pct: float, savings_drift: float,
-            latency_factor: float, bytes_pct: float = 0.0) -> dict:
+            latency_factor: float, bytes_pct: float = 0.0,
+            shard_pct: float = 0.0) -> dict:
     """Apply a synthetic regression to the fresh payloads (gate
     self-test: the comparator must flag it)."""
     f = json.loads(json.dumps(fresh, default=float))  # deep copy
@@ -151,6 +158,14 @@ def _inject(fresh: dict, throughput_pct: float, savings_drift: float,
                                              for c in cells)
             agg["min_savings_vs_broadcast"] = min(
                 c["savings_vs_broadcast"] for c in cells)
+    if shard_pct:
+        # collapse the capacity curve: each K step LOSES shard_pct vs
+        # its predecessor, so monotonicity must go red for any
+        # shard_pct > --shard-capacity-tol
+        scaling = sorted(f["service"]["sharded"]["uniform_scaling"],
+                         key=lambda r: r["shards"])
+        for prev, cur in zip(scaling, scaling[1:]):
+            cur["capacity_dps"] = prev["capacity_dps"] * (1.0 - shard_pct)
     return f
 
 
@@ -281,6 +296,53 @@ def run_gate(fresh: dict, base: dict, args) -> int:
                    f"{fam['throughput_dps']:.1f} >= {floor:.1f} "
                    f"(sanity floor)")
 
+    # --- sharded authority plane: capacity scaling + ledger identity.
+    # All checks are internal to the fresh payload (capacity is
+    # machine-dependent, so there is no cross-baseline comparison;
+    # savings ARE compared against the fresh plain rows, which the
+    # blocks above already pinned to the baseline).
+    sh = fsv.get("sharded", {})
+    print(f"[sharded]  capacity monotone in K (tol "
+          f"-{args.shard_capacity_tol:.0%} per step), savings within "
+          f"±{args.shard_savings_tol:.3f} of the plain rows")
+    gate.check(bool(sh), "sharded.section",
+               "BENCH_service.json carries the sharded block")
+    if sh:
+        gate.check(all(f.get("bit_identical_to_plain")
+                       for f in sh["families"]),
+                   "sharded.bit_identity",
+                   f"all {len(sh['families'])} families bit-identical "
+                   f"to the plain broker at K={max(sh['ks'])}")
+        f_by_fam = {f["family"]: f for f in fsv["families"]}
+        for fam in sh["families"]:
+            plain = f_by_fam.get(fam["family"])
+            if plain is None:
+                continue
+            delta = (fam["savings_vs_broadcast"]
+                     - plain["savings_vs_broadcast"])
+            gate.check(abs(delta) <= args.shard_savings_tol,
+                       f"sharded.savings[{fam['family']}]",
+                       f"{fam['savings_vs_broadcast']:.4f} vs plain "
+                       f"{plain['savings_vs_broadcast']:.4f} "
+                       f"(delta {delta:+.4f})")
+        scaling = sorted(sh["uniform_scaling"],
+                         key=lambda r: r["shards"])
+        for prev, cur in zip(scaling, scaling[1:]):
+            floor = prev["capacity_dps"] * (1.0 - args.shard_capacity_tol)
+            gate.check(cur["capacity_dps"] >= floor,
+                       f"sharded.capacity[K={cur['shards']}]",
+                       f"{cur['capacity_dps']:.1f} >= {floor:.1f} "
+                       f"(K={prev['shards']}: "
+                       f"{prev['capacity_dps']:.1f})")
+        if len(scaling) >= 2:
+            gate.check(scaling[-1]["capacity_dps"]
+                       > scaling[0]["capacity_dps"],
+                       "sharded.capacity_scales",
+                       f"K={scaling[-1]['shards']} "
+                       f"{scaling[-1]['capacity_dps']:.1f} > "
+                       f"K={scaling[0]['shards']} "
+                       f"{scaling[0]['capacity_dps']:.1f}")
+
     # --- content plane: delta coherence byte savings
     fc, bc = fresh["content"], base["content"]
     print(f"[content]  delta < full < broadcast on every cell; "
@@ -371,6 +433,11 @@ def main(argv=None) -> int:
                     help="bloat every content-plane cell's delta_bytes "
                     "by (1+PCT) and recompute savings/dominance - the "
                     "gate must go red (self-test)")
+    ap.add_argument("--inject-shard-regression", type=float,
+                    default=0.0, metavar="PCT",
+                    help="make each shard-count step LOSE PCT capacity "
+                    "vs its predecessor - the gate must go red for "
+                    "PCT > --shard-capacity-tol (self-test)")
     ap.add_argument("--savings-tol", type=float, default=0.005,
                     help="same-grid per-family savings tolerance, "
                     "absolute (default 0.005 - savings are "
@@ -405,6 +472,17 @@ def main(argv=None) -> int:
     ap.add_argument("--latency-ceiling-ms", type=float, default=500.0,
                     help="cross-machine absolute service-latency "
                     "pathology bound (ms)")
+    ap.add_argument("--shard-capacity-tol", type=float, default=0.10,
+                    help="per-step tolerance on the K-shard capacity "
+                    "curve: capacity(K_next) >= capacity(K) x (1-tol) "
+                    "(capacity is self-normalized decide-busy makespan, "
+                    "so it is gated within the fresh payload, not "
+                    "cross-machine)")
+    ap.add_argument("--shard-savings-tol", type=float, default=0.02,
+                    help="sharded rows' savings must stay within this "
+                    "absolute tolerance of the plain rows (ledgers are "
+                    "bit-identical, so drift can only come from batch "
+                    "accounting)")
     args = ap.parse_args(argv)
 
     base = {k: _load(p) for k, p in BASELINES.items()}
@@ -421,16 +499,19 @@ def main(argv=None) -> int:
 
     if (args.inject_throughput_regression or args.inject_savings_drift
             or args.inject_latency_regression != 1.0
-            or args.inject_bytes_regression):
+            or args.inject_bytes_regression
+            or args.inject_shard_regression):
         print(f"bench-gate: INJECTING synthetic regression "
               f"(throughput -{args.inject_throughput_regression:.0%}, "
               f"savings -{args.inject_savings_drift}, "
               f"latency x{args.inject_latency_regression:.1f}, "
-              f"delta bytes +{args.inject_bytes_regression:.0%})")
+              f"delta bytes +{args.inject_bytes_regression:.0%}, "
+              f"shard capacity -{args.inject_shard_regression:.0%}/step)")
         fresh = _inject(fresh, args.inject_throughput_regression,
                         args.inject_savings_drift,
                         args.inject_latency_regression,
-                        args.inject_bytes_regression)
+                        args.inject_bytes_regression,
+                        args.inject_shard_regression)
 
     return run_gate(fresh, base, args)
 

@@ -1,4 +1,5 @@
-"""Architecture configs: assignment table entries + registry."""
+"""Architecture configs (assignment table entries + registry) and the
+layered coherence-config surface (core -> service -> shard topology)."""
 
 from repro.configs.base import (ModelConfig, MoEConfig, MLAConfig,
                                 MambaConfig, RWKVConfig, ShapeConfig,
@@ -6,10 +7,15 @@ from repro.configs.base import (ModelConfig, MoEConfig, MLAConfig,
 from repro.configs.registry import (ARCHS, get, register, smoke_config,
                                     input_specs, shapes_for,
                                     n_params_analytic, n_active_params)
+from repro.configs.coherence import (CoherenceConfig, CoherenceCore,
+                                     ServiceLayer, ShardTopology,
+                                     shard_of_artifact)
 
 __all__ = [
     "ModelConfig", "MoEConfig", "MLAConfig", "MambaConfig", "RWKVConfig",
     "ShapeConfig", "SHAPES", "VisionStubConfig", "AudioStubConfig",
     "ARCHS", "get", "register", "smoke_config", "input_specs",
     "shapes_for", "n_params_analytic", "n_active_params",
+    "CoherenceConfig", "CoherenceCore", "ServiceLayer", "ShardTopology",
+    "shard_of_artifact",
 ]

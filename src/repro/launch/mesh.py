@@ -37,6 +37,23 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def shard_devices(n_shards: int, axis_name: str = "shards") -> tuple:
+    """Round-robin device assignment for K authority-broker shards.
+
+    Reuses the sweep-mesh machinery: a 1-D mesh over min(K, local
+    devices) and a length-K tuple assigning each shard its device, so
+    every shard's micro-batch decision (``mesi_decision_batch`` /
+    ``apply_actions``) runs as its own device program.  On a
+    single-device host every shard maps to device 0 - byte-for-byte
+    the unpinned behavior (CI forces 8 host devices to exercise the
+    real placement; see the module docstring).
+    """
+    n = max(1, min(int(n_shards), len(jax.devices())))
+    mesh = make_sweep_mesh(n, axis_name)
+    devices = list(mesh.devices.flat)
+    return tuple(devices[s % len(devices)] for s in range(int(n_shards)))
+
+
 def make_sweep_mesh(n_devices: Optional[int] = None,
                     axis_name: str = "runs"):
     """1-D mesh for the device-sharded fleet sweep engine.

@@ -30,8 +30,8 @@ import json
 import pathlib
 from typing import Optional
 
-from repro.service import (BrokerConfig, CoherenceBroker, drive_workload,
-                           verify_broker)
+from repro.service import (CoherenceBroker, CoherenceConfig, connect,
+                           drive_workload, verify_broker)
 from repro.sim import workloads
 
 
@@ -111,8 +111,10 @@ async def serve_tcp(broker: CoherenceBroker, host: str = "127.0.0.1",
     # a write request carries artifact_tokens JSON ints on one line;
     # asyncio's default 64 KiB readline limit would drop the connection
     # instead of answering, so size the limit to the artifact slot.
-    limit = max(1 << 16,
-                broker.config.artifact_tokens * 16 + (1 << 12))
+    tokens = getattr(broker.config, "artifact_tokens", None)
+    if tokens is None:          # layered config (sharded plane)
+        tokens = broker.config.core.artifact_tokens
+    limit = max(1 << 16, tokens * 16 + (1 << 12))
     return await asyncio.start_server(
         lambda r, w: handle_connection(broker, r, w), host, port,
         limit=limit)
@@ -126,11 +128,11 @@ async def run_load(args) -> dict:
     w = build_workload(args.family, args.clients, args.artifacts,
                        args.artifact_tokens, args.rounds,
                        volatility=args.volatility, seed=args.seed)
-    cfg = BrokerConfig(
-        n_agents=args.clients, artifacts=artifact_names(args.artifacts),
+    cfg = CoherenceConfig.make(
+        args.clients, artifact_names(args.artifacts),
         artifact_tokens=args.artifact_tokens, strategy=args.strategy,
-        backend=args.backend)
-    async with CoherenceBroker(cfg) as broker:
+        backend=args.backend, shards=args.shards, hosts=args.hosts)
+    async with connect(cfg) as broker:
         rep = await drive_workload(broker, w, args.rounds,
                                    seed=args.seed,
                                    lockstep=not args.open_loop,
@@ -143,6 +145,7 @@ async def run_load(args) -> dict:
             "actions": rep.n_actions, "batches": stats["n_batches"],
             "mean_batch": round(stats["mean_batch"], 2),
             "throughput_dps": round(rep.throughput_dps, 1),
+            "capacity_dps": round(rep.capacity_dps, 1),
             "p50_ms": round(rep.latency_ms(50), 3),
             "p99_ms": round(rep.latency_ms(99), 3),
             "coherent_tokens": rep.coherent_tokens,
@@ -150,6 +153,14 @@ async def run_load(args) -> dict:
             "savings_vs_broadcast": round(rep.savings_vs_broadcast, 4),
             "cache_hit_rate": round(stats["cache_hit_rate"], 4),
         }
+        if args.shards > 1 or args.hosts > 1:
+            summary.update({
+                "shards": stats["n_shards"], "hosts": stats["n_hosts"],
+                "shard_artifacts": list(stats["shard_artifacts"]),
+                "l1_fills": stats["l1_fills"],
+                "l2_fills": stats["l2_fills"],
+                "l1_fill_rate": round(stats["l1_fill_rate"], 4),
+            })
         if args.trace_out:
             pathlib.Path(args.trace_out).write_text(
                 broker.trace.to_json())
@@ -167,11 +178,12 @@ async def run_load(args) -> dict:
 async def run_tcp(args) -> None:
     # an open-ended frontend must not grow an unbounded audit trace;
     # use the load-generator mode for oracle-replayable captures.
-    cfg = BrokerConfig(
-        n_agents=args.clients, artifacts=artifact_names(args.artifacts),
+    cfg = CoherenceConfig.make(
+        args.clients, artifact_names(args.artifacts),
         artifact_tokens=args.artifact_tokens, strategy=args.strategy,
-        backend=args.backend, capture_trace=False)
-    async with CoherenceBroker(cfg) as broker:
+        backend=args.backend, capture_trace=False,
+        shards=args.shards, hosts=args.hosts)
+    async with connect(cfg) as broker:
         server = await serve_tcp(broker, args.host, args.tcp)
         addr = server.sockets[0].getsockname()
         print(f"coherence broker on {addr[0]}:{addr[1]} "
@@ -197,6 +209,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "scan", "pallas"),
                     help="decision route (see repro.service.batching)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="authority-plane shard count (K directory "
+                    "shards, hash-of-artifact routed; 1 = the single "
+                    "broker)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="L1 placement domains (per-host L1 "
+                    "directories in front of the shards; 1 = no L1 "
+                    "plane)")
     ap.add_argument("--volatility", type=float, default=None,
                     help="write probability for --family uniform")
     ap.add_argument("--seed", type=int, default=0)

@@ -3,24 +3,40 @@ a servable async system (contribution 5).
 
 Public surface (stable import paths for examples and docs):
 
-  * :class:`CoherenceBroker` / :class:`BrokerConfig` - the asyncio
-    single-writer authority with micro-batched coherence decisions;
+  * :func:`connect` - the **blessed entry point**: a topology-neutral
+    factory that resolves the layered ``repro.configs.CoherenceConfig``
+    onto the right authority implementation (single broker or sharded
+    plane) without callers naming either;
+  * :class:`CoherenceBroker` - the asyncio single-writer authority
+    with micro-batched coherence decisions;
+  * :class:`ShardedCoherenceBroker` / :class:`HostL1Directory` - the
+    K-shard authority plane with per-host L1 directories;
+  * :class:`BrokerConfig` - legacy flat config, now a thin frozen view
+    over ``CoherenceConfig`` (direct construction warns once);
   * :class:`CoherentClient` / :func:`make_clients` /
     :class:`ServicePortal` / :class:`SyncCoherentClient` - per-agent
     clients (async-native, plus a sync bridge for frameworks);
   * :class:`CoherentTool`, :func:`langgraph_node`, :func:`crewai_tool`,
     :func:`autogen_functions` - the thin framework adapter layer;
   * :class:`ServiceTrace` / :func:`replay_trace` /
-    :func:`verify_broker` - oracle-replayable decision traces;
+    :func:`verify_broker` / :func:`verify_sharded_broker` -
+    oracle-replayable decision traces (``verify_broker`` dispatches on
+    the broker flavor);
   * :func:`drive_workload` / :class:`LoadReport` - the concurrent load
     generator over workload-zoo rate matrices.
 """
 
+from repro.configs.coherence import (CoherenceConfig, CoherenceCore,
+                                     ServiceLayer, ShardTopology,
+                                     shard_of_artifact)
 from repro.service.broker import (BROKER_STRATEGIES, BrokerConfig,
                                   CoherenceBroker, InvariantViolation,
                                   ReadResult, WriteResult)
 from repro.service.batching import (BatchDecider, BatchDecision,
                                     resolve_decide_backend)
+from repro.service.sharding import (HostL1Directory, L1Entry,
+                                    ShardedCoherenceBroker)
+from repro.service.connect import connect, resolve_broker
 from repro.service.client import (CoherentClient, DeltaMismatch,
                                   ServicePortal, SyncCoherentClient,
                                   make_clients)
@@ -28,18 +44,23 @@ from repro.service.adapters import (CoherentTool, ToolResult,
                                     autogen_functions, crewai_tool,
                                     langgraph_node)
 from repro.service.trace import (ServiceTrace, StepRecord, replay_trace,
-                                 verify_broker, verify_broker_content)
+                                 verify_broker, verify_broker_content,
+                                 verify_sharded_broker)
 from repro.service.loadgen import LoadReport, drive_workload
 
 __all__ = [
+    "connect", "resolve_broker",
+    "CoherenceConfig", "CoherenceCore", "ServiceLayer", "ShardTopology",
+    "shard_of_artifact",
     "BROKER_STRATEGIES", "BrokerConfig", "CoherenceBroker",
     "InvariantViolation", "ReadResult", "WriteResult",
     "BatchDecider", "BatchDecision", "resolve_decide_backend",
+    "HostL1Directory", "L1Entry", "ShardedCoherenceBroker",
     "CoherentClient", "DeltaMismatch", "ServicePortal",
     "SyncCoherentClient", "make_clients",
     "CoherentTool", "ToolResult", "autogen_functions", "crewai_tool",
     "langgraph_node",
     "ServiceTrace", "StepRecord", "replay_trace", "verify_broker",
-    "verify_broker_content",
+    "verify_broker_content", "verify_sharded_broker",
     "LoadReport", "drive_workload",
 ]

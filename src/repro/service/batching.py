@@ -128,11 +128,21 @@ class BatchDecider:
     the invariant suite after every batch).
     """
 
-    def __init__(self, cfg: acs.ACSConfig, backend: str = "auto") -> None:
+    def __init__(self, cfg: acs.ACSConfig, backend: str = "auto",
+                 device=None) -> None:
         self.cfg = cfg
         self.backend = resolve_decide_backend(cfg, backend)
         self.arrays = acs.init_arrays(cfg)
         self.metrics = acs.init_metrics()
+        #: device this authority's directory lives on.  The sharded
+        #: plane pins each shard's decider to its own device of the
+        #: sweep mesh (``launch.mesh.shard_devices``), so every shard's
+        #: serialized pass runs as its own device program - the
+        #: service-plane analog of the sharded sweep grids.
+        self.device = device
+        if device is not None:
+            self.arrays = jax.device_put(self.arrays, device)
+            self.metrics = jax.device_put(self.metrics, device)
         self._scan = _scan_decider(cfg) if self.backend == "scan" else None
         self._deciding = False
 

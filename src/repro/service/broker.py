@@ -27,9 +27,11 @@ from __future__ import annotations
 
 import asyncio
 import collections
+import contextvars
 import dataclasses
 import time
-from typing import Dict, NamedTuple, Optional, Sequence
+import warnings
+from typing import Callable, Dict, NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -54,9 +56,39 @@ class InvariantViolation(AssertionError):
     """A verified CCS invariant failed on live broker state."""
 
 
+#: set while ``CoherenceConfig.broker_view()`` constructs the flat view,
+#: so only *direct* legacy construction triggers the deprecation shim.
+_VIEW_CONSTRUCTION = contextvars.ContextVar("broker_view_construction",
+                                            default=False)
+_LEGACY_WARNED = False
+
+
+def _warn_legacy_broker_config() -> None:
+    global _LEGACY_WARNED
+    if _LEGACY_WARNED:
+        return
+    _LEGACY_WARNED = True
+    warnings.warn(
+        "constructing BrokerConfig directly is deprecated: it is now a "
+        "thin frozen view over the layered "
+        "repro.configs.CoherenceConfig (core -> service -> shard "
+        "topology); build one with CoherenceConfig.make(...) and "
+        "connect()/broker_view().  Direct construction keeps working "
+        "(ledgers are byte-identical) but loses the topology layer.",
+        DeprecationWarning, stacklevel=3)
+
+
 @dataclasses.dataclass(frozen=True)
 class BrokerConfig:
-    """Static service parameters (baked into the compiled decider)."""
+    """Static single-authority service parameters (baked into the
+    compiled decider).
+
+    Since the layered-config redesign this is a *thin frozen view* over
+    ``repro.configs.CoherenceConfig``'s core + service layers - the
+    blessed constructors are ``CoherenceConfig.broker_view()`` and
+    ``repro.service.connect(...)``.  Direct construction is a
+    deprecation shim: it warns once per process and keeps working
+    byte-identically."""
 
     n_agents: int
     artifacts: tuple
@@ -84,6 +116,8 @@ class BrokerConfig:
     chunk_tokens: int = 0
 
     def __post_init__(self):
+        if not _VIEW_CONSTRUCTION.get():
+            _warn_legacy_broker_config()
         if self.strategy not in BROKER_STRATEGIES:
             raise ValueError(
                 f"broker serves {BROKER_STRATEGIES}, got "
@@ -117,6 +151,44 @@ class BrokerConfig:
             strategy=acs.STRATEGY_CODES[self.strategy],
             access_k=self.access_k,
             max_stale_steps=self.max_stale_steps,
+            chunk_tokens=self.chunk_tokens)
+
+    @classmethod
+    def _from_layers(cls, coherence) -> "BrokerConfig":
+        """The blessed view constructor (``CoherenceConfig.broker_view``
+        calls this); suppresses the legacy-construction warning."""
+        token = _VIEW_CONSTRUCTION.set(True)
+        try:
+            return cls(
+                n_agents=coherence.n_agents,
+                artifacts=tuple(coherence.artifacts),
+                artifact_tokens=coherence.core.artifact_tokens,
+                strategy=coherence.core.strategy,
+                access_k=coherence.core.access_k,
+                max_stale_steps=coherence.core.max_stale_steps,
+                batch_window=coherence.service.batch_window,
+                max_batch=coherence.service.max_batch,
+                backend=coherence.service.backend,
+                check_invariants=coherence.service.check_invariants,
+                capture_trace=coherence.service.capture_trace,
+                latency_window=coherence.service.latency_window,
+                chunk_tokens=coherence.core.chunk_tokens)
+        finally:
+            _VIEW_CONSTRUCTION.reset(token)
+
+    def coherence_config(self):
+        """Lift this flat view back into the layered config (trivial
+        topology)."""
+        from repro.configs.coherence import from_broker_fields
+        return from_broker_fields(
+            self.n_agents, self.artifacts,
+            artifact_tokens=self.artifact_tokens, strategy=self.strategy,
+            access_k=self.access_k, max_stale_steps=self.max_stale_steps,
+            batch_window=self.batch_window, max_batch=self.max_batch,
+            backend=self.backend,
+            check_invariants=self.check_invariants,
+            capture_trace=self.capture_trace,
+            latency_window=self.latency_window,
             chunk_tokens=self.chunk_tokens)
 
 
@@ -164,13 +236,31 @@ class CoherenceBroker:
     """
 
     def __init__(self, config: BrokerConfig,
-                 contents: Optional[Dict[str, Sequence[int]]] = None
-                 ) -> None:
+                 contents: Optional[Dict[str, Sequence[int]]] = None,
+                 *, on_commit: Optional[Callable] = None,
+                 device=None) -> None:
+        if hasattr(config, "broker_view"):   # layered CoherenceConfig
+            if not config.topology.trivial:
+                raise ValueError(
+                    "CoherenceBroker is the single-authority shard; "
+                    "non-trivial topologies need "
+                    "repro.service.connect(...) / "
+                    "ShardedCoherenceBroker")
+            config = config.broker_view()
         self.config = config
         self.names = tuple(config.artifacts)
         self._index = {a: d for d, a in enumerate(self.names)}
         self.acs_config = config.acs_config()
-        self.decider = BatchDecider(self.acs_config, config.backend)
+        self.decider = BatchDecider(self.acs_config, config.backend,
+                                    device=device)
+        #: called as ``on_commit(broker, commit)`` after every committed
+        #: micro-batch (the sharded authority plane uses this to build
+        #: the globally-sequenced trace)
+        self._on_commit = on_commit
+        #: decision-plane busy time: seconds spent inside the decider
+        #: (the serialized per-authority bottleneck the shard-capacity
+        #: metric is built on)
+        self.decide_busy_s = 0.0
         self.bus = EventBus()
         self.store = ArtifactStore()
         for name in self.names:
@@ -354,8 +444,11 @@ class CoherenceBroker:
 
         ver_before = np.asarray(self.decider.arrays.version,
                                 np.int64).copy()
+        t_decide = time.perf_counter()
         decision = self.decider.decide(acts, arts, writes,
                                        write_chunks=wmasks)
+        busy_s = time.perf_counter() - t_decide
+        self.decide_busy_s += busy_s
         ver_after = np.asarray(self.decider.arrays.version, np.int64)
 
         if self.config.check_invariants:
@@ -417,6 +510,12 @@ class CoherenceBroker:
             self.trace.append_step(acts, arts, writes, decision.miss,
                                    decision.version, latencies,
                                    write_chunks=wmasks)
+        if self._on_commit is not None:
+            self._on_commit(self, {
+                "acts": acts, "arts": arts, "writes": writes,
+                "miss": decision.miss, "version": decision.version,
+                "latencies": latencies, "write_chunks": wmasks,
+                "busy_s": busy_s})
 
     # ------------------------------------------------------ invariants
     def _check_invariants(self, batch, ver_before, ver_after) -> None:
@@ -480,6 +579,7 @@ class CoherenceBroker:
                                                + led.n_fetches, 1),
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "decide_busy_s": self.decide_busy_s,
         }
         if self.chunks is not None:
             out.update(self.wire)

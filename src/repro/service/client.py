@@ -23,6 +23,13 @@ class DeltaMismatch(AssertionError):
     """A delta-patched mirror diverged from the authority copy."""
 
 
+def _chunk_tokens(config) -> int:
+    """Chunk granularity of a flat BrokerConfig or a layered
+    CoherenceConfig (clients serve both broker flavors)."""
+    core = getattr(config, "core", None)
+    return core.chunk_tokens if core is not None else config.chunk_tokens
+
+
 class CoherentClient:
     """One agent's handle on the broker (async).
 
@@ -49,7 +56,7 @@ class CoherentClient:
     def _patch_mirror(self, artifact: str, res: ReadResult) -> None:
         if res.delta is None:
             return
-        ct = self.broker.config.chunk_tokens
+        ct = _chunk_tokens(self.broker.config)
         base = self._mirror.get(artifact)
         if base is None:
             # first contact: adopt the full copy (the broker charged a
@@ -118,12 +125,14 @@ class ServicePortal:
             target=self._loop.run_forever, name="coherence-broker",
             daemon=True)
         self._thread.start()
-        self.broker: CoherenceBroker = self.call(
-            self._make_broker(config, contents))
+        self.broker = self.call(self._make_broker(config, contents))
 
     @staticmethod
-    async def _make_broker(config, contents) -> CoherenceBroker:
-        return await CoherenceBroker(config, contents).start()
+    async def _make_broker(config, contents):
+        # topology-neutral: a layered config with shards/hosts gets the
+        # sharded authority plane, anything else the single broker
+        from repro.service.connect import resolve_broker
+        return await resolve_broker(config, contents).start()
 
     # ---------------------------------------------------------------
     def call(self, coro):

@@ -48,11 +48,26 @@ class LoadReport:
     latencies_s: np.ndarray
     broadcast_tokens: int     # what per-round full rebroadcast would pay
     coherent_tokens: int      # what the broker actually charged
+    #: per-authority-shard seconds spent inside the decider (length 1
+    #: for the single broker).  The decision plane's makespan is the
+    #: MAX entry: shards decide concurrently under the shard-per-host
+    #: deployment, so capacity scales with the slowest shard, not the
+    #: sum.
+    decide_busy_s: tuple = (0.0,)
 
     @property
     def throughput_dps(self) -> float:
         """Decisions per second, end to end."""
         return self.n_actions / max(self.wall_s, 1e-9)
+
+    @property
+    def capacity_dps(self) -> float:
+        """Decision capacity: decisions per second of decision-plane
+        makespan (max busy time over authority shards).  Unlike
+        ``throughput_dps`` this is host-count independent - it measures
+        what the authority plane itself can serialize, which is the
+        quantity sharding scales."""
+        return self.n_actions / max(max(self.decide_busy_s), 1e-9)
 
     @property
     def savings_vs_broadcast(self) -> float:
@@ -99,6 +114,12 @@ async def drive_workload(broker: CoherenceBroker, workload,
     rng = np.random.default_rng(seed)
     schedule = [sample_round(rng, workload) for _ in range(n_rounds)]
 
+    def busy() -> tuple:
+        if hasattr(broker, "decision_busy"):    # sharded plane
+            return tuple(broker.decision_busy())
+        return (broker.decide_busy_s,)
+
+    busy_before = busy()
     tok_before = broker.ledger.total_tokens
     lat: list = []
     n_reads = n_writes = 0
@@ -146,4 +167,6 @@ async def drive_workload(broker: CoherenceBroker, workload,
         n_reads=n_reads, n_writes=n_writes, wall_s=wall,
         latencies_s=np.asarray(lat, np.float64),
         broadcast_tokens=broadcast,
-        coherent_tokens=broker.ledger.total_tokens - tok_before)
+        coherent_tokens=broker.ledger.total_tokens - tok_before,
+        decide_busy_s=tuple(b - b0 for b, b0
+                            in zip(busy(), busy_before)))

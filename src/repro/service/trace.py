@@ -41,6 +41,10 @@ class StepRecord:
     #: measured dirty chunk indices per acting agent (content plane;
     #: empty tuples for reads / whole-artifact brokers)
     chunks: tuple = ()
+    #: authority shard that committed this batch (-1 = unsharded
+    #: broker).  Steps from different shards interleave in *global
+    #: commit order* - the one serializable order the oracle replays.
+    shard: int = -1
 
 
 @dataclasses.dataclass
@@ -54,6 +58,13 @@ class ServiceTrace:
     access_k: int
     max_stale_steps: int
     chunk_tokens: int = 0
+    #: authority-plane topology: shard count and per-artifact shard id
+    #: (empty tuple = unsharded).  Replays ignore them - the global
+    #: commit order is already serializable - but the cross-shard
+    #: conformance leg (``sim.oracle.check_sharded_trace``) uses them
+    #: to re-derive every shard's local history.
+    n_shards: int = 1
+    artifact_shards: tuple = ()
     steps: list = dataclasses.field(default_factory=list)
 
     @classmethod
@@ -69,7 +80,7 @@ class ServiceTrace:
     # -------------------------------------------------------- capture
     def append_step(self, acts, arts, writes, miss, version,
                     latencies: Optional[dict] = None,
-                    write_chunks=None) -> None:
+                    write_chunks=None, shard: int = -1) -> None:
         agents = tuple(int(a) for a in np.flatnonzero(np.asarray(acts)))
         chunks = ()
         if write_chunks is not None:
@@ -84,7 +95,7 @@ class ServiceTrace:
             version=tuple(int(version[a]) for a in agents),
             latency_s=tuple(float((latencies or {}).get(a, 0.0))
                             for a in agents),
-            chunks=chunks))
+            chunks=chunks, shard=int(shard)))
 
     @property
     def n_steps(self) -> int:
@@ -136,7 +147,8 @@ class ServiceTrace:
     # --------------------------------------------------- serialization
     def to_json(self) -> str:
         payload = dataclasses.asdict(self)
-        payload["schema_version"] = 2   # v2: chunk_tokens + step chunks
+        # v2: chunk_tokens + step chunks; v3: shard topology + step shard
+        payload["schema_version"] = 3
         return json.dumps(payload, indent=2)
 
     @classmethod
@@ -144,10 +156,14 @@ class ServiceTrace:
         payload = json.loads(text)
         payload.pop("schema_version", None)
         payload.setdefault("chunk_tokens", 0)   # v1 traces
+        payload.setdefault("n_shards", 1)       # v1/v2 traces
+        payload["artifact_shards"] = tuple(
+            payload.get("artifact_shards", ()))
 
         def record(s: dict) -> StepRecord:
             chunks = tuple(tuple(c) for c in s.pop("chunks", ()))
-            return StepRecord(chunks=chunks,
+            shard = int(s.pop("shard", -1))
+            return StepRecord(chunks=chunks, shard=shard,
                               **{k: tuple(v) for k, v in s.items()})
 
         steps = [record(s) for s in payload.pop("steps")]
@@ -175,8 +191,14 @@ def verify_broker(broker, name: str = "service"):
     batching, interleaving and dispatch may reorder concurrent
     requests, but the serialized history the broker committed must be
     exactly executable - and exactly charged - under all four
-    reference implementations."""
+    reference implementations.
+
+    Sharded brokers (``service.sharding.ShardedCoherenceBroker``)
+    dispatch to :func:`verify_sharded_broker`, which adds the
+    cross-shard and L1/L2 conformance legs."""
     from repro.sim import oracle
+    if getattr(broker, "is_sharded", False):
+        return verify_sharded_broker(broker, name=name)
     if not broker.config.capture_trace:
         raise ValueError(
             "broker was started with capture_trace=False (unbounded "
@@ -211,6 +233,124 @@ def verify_broker(broker, name: str = "service"):
     if broker.chunks is not None:
         verify_broker_content(broker, name=name)
     return report
+
+
+def verify_sharded_broker(broker, name: str = "service-sharded"):
+    """Conformance closure for the sharded authority plane.
+
+    Four legs, all bit-exact:
+
+    1. **Global serializability** + **cross-shard decomposition** -
+       the interleaved per-shard batch stream replays through
+       ``sim.oracle.check_sharded_trace``: the four-way harness treats
+       it as ONE serializable history, and every shard's projected
+       sub-trace independently re-derives that shard's directory
+       columns and its share of the ledger.
+    2. **Live-state comparison** - the *summed* per-shard ledgers and
+       the *assembled* directory/version/last_sync views must equal
+       the global replay exactly (sharding changed nothing
+       observable).
+    3. **Content plane** (chunked brokers) - summed wire bytes and
+       assembled chunk arrays vs the byte-exact replay, plus every
+       shard's chunk index reassembling to its canonical artifacts.
+    4. **L1/L2** - every valid host-L1 entry is within the
+       version-lag bound and byte-identical to its shard's authority
+       copy, and L1+L2 fill attribution conserves the read-miss count
+       (the L1 plane never changed what the decision plane charged).
+    """
+    from repro.sim import oracle
+    if not broker.config.service.capture_trace:
+        raise ValueError(
+            "broker was started with capture_trace=False (unbounded "
+            "deployments); oracle verification needs the audit trace")
+    trace = broker.trace
+    if broker.n_batches != trace.n_steps:
+        raise ValueError(
+            f"trace has {trace.n_steps} steps but the sharded broker "
+            f"committed {broker.n_batches} batches - partial capture "
+            f"cannot be verified")
+    report = oracle.check_sharded_trace(
+        trace.acs_config(), trace.to_oracle_trace(),
+        trace.artifact_shards, name=name)
+    led = broker.ledger
+    for field in dataclasses.fields(oracle.Ledger):
+        live = int(getattr(led, field.name))
+        replayed = int(getattr(report.ledger, field.name))
+        if live != replayed:
+            raise oracle.ConformanceError(
+                f"summed shard ledger.{field.name} = {live} but oracle "
+                f"replay charged {replayed}")
+    for label, live, want in (
+            ("directory_state", broker.directory_state, report.state),
+            ("versions", broker.versions, report.version),
+            ("last_sync", broker.last_sync, report.last_sync)):
+        if not np.array_equal(np.asarray(live), want):
+            raise oracle.ConformanceError(
+                f"assembled sharded {label} diverged from replay:\n"
+                f"{np.asarray(live)}\nvs\n{want}")
+    if broker.chunked:
+        _verify_sharded_content(broker, report, name=name)
+    # ---- L1/L2 leg
+    broker.check_l1()
+    read_misses = sum(
+        sum(1 for w, miss in zip(s.writes, s.miss) if miss and not w)
+        for s in trace.steps)
+    attributed = (broker.l1_wire["l1_fills"]
+                  + broker.l1_wire["l2_fills"])
+    if attributed != read_misses:
+        raise oracle.ConformanceError(
+            f"L1/L2 fill attribution lost fills: {attributed} "
+            f"attributed vs {read_misses} read misses in the trace")
+    return report
+
+
+def _verify_sharded_content(broker, report, name: str):
+    """Byte-exact content leg of sharded verification (chunk ledgers,
+    chunk arrays, and per-shard store reassembly)."""
+    from repro.content.chunks import reassemble, split_chunks
+    from repro.sim import oracle
+    trace = broker.trace
+    creport = oracle.check_content_trace(
+        trace.acs_config(), trace.to_oracle_trace(),
+        name=f"{name}:content")
+    wire = broker.wire
+    for field in dataclasses.fields(oracle.ByteLedger):
+        live = int(wire[field.name])
+        replayed = int(getattr(creport.ledger, field.name))
+        if live != replayed:
+            raise oracle.ConformanceError(
+                f"summed shard wire.{field.name} = {live} but oracle "
+                f"replay charged {replayed}")
+    cv = np.zeros_like(np.asarray(creport.chunk_version))
+    cs = np.zeros_like(np.asarray(creport.chunk_sync))
+    cd = np.zeros_like(np.asarray(creport.chunk_dirty))
+    for shard, sub in enumerate(broker.brokers):
+        arrays = sub.decider.arrays
+        for local, d in enumerate(
+                broker.config.shard_artifact_indices()[shard]):
+            cv[d] = np.asarray(arrays.chunk_version, np.int32)[local]
+            cs[:, d] = np.asarray(arrays.chunk_sync, np.int32)[:, local]
+            cd[d] = np.asarray(arrays.chunk_dirty, np.int32)[local]
+    for label, live, want in (
+            ("chunk_version", cv, creport.chunk_version),
+            ("chunk_sync", cs, creport.chunk_sync),
+            ("chunk_dirty", cd, creport.chunk_dirty)):
+        if not np.array_equal(live, want):
+            raise oracle.ConformanceError(
+                f"assembled sharded {label} diverged from replay:\n"
+                f"{live}\nvs\n{want}")
+    for sub in broker.brokers:
+        for artifact in sub.names:
+            canonical = tuple(sub.store.get(artifact))
+            if sub.chunks.reassembled(artifact) != canonical:
+                raise oracle.ConformanceError(
+                    f"chunk index of {artifact!r} does not reassemble "
+                    f"to the canonical artifact on its shard")
+            if reassemble(split_chunks(
+                    canonical, sub.config.chunk_tokens)) != canonical:
+                raise oracle.ConformanceError(
+                    f"chunk round-trip broke for {artifact!r}")
+    return creport
 
 
 def verify_broker_content(broker, name: str = "service"):

@@ -565,8 +565,10 @@ def _grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
         # forced "pallas" on TTL/broadcast/K-staleness configs would
         # silently compute lazy semantics.
         tick_backend = "scan"
-    cache_key = (_static_key(cfg), include_broadcast, tick_backend,
-                 plan.devices, plan.axis)
+    # the FULL resolved plan is part of the key: two plans over the same
+    # devices/axis can still pad the run axis differently (pad_runs), and
+    # a stale hit would silently run the wrong grid padding
+    cache_key = (_static_key(cfg), include_broadcast, tick_backend, plan)
     fn = _GRID_CACHE.get(cache_key)
     if fn is not None:
         return fn
@@ -637,7 +639,7 @@ def _het_grid_fn(cfg: acs.ACSConfig, include_broadcast: bool,
     if tick_backend == "pallas" and not _pallas_tick_supported(cfg):
         tick_backend = "scan"
     cache_key = ("het", _static_key(cfg), include_broadcast, tick_backend,
-                 plan.devices, plan.axis)
+                 plan)   # full plan: see _grid_fn (pad_runs matters)
     fn = _GRID_CACHE.get(cache_key)
     if fn is not None:
         return fn

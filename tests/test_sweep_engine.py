@@ -147,6 +147,25 @@ class TestOneCompilation:
             compare_grid([a, b, c])
             assert tc.count == 2
 
+    def test_grid_cache_keys_on_full_shard_plan(self):
+        """Regression: the grid cache must key on the FULL resolved
+        ShardPlan.  Two plans over the same devices/axis that differ
+        only in ``pad_runs`` are different programs (the padded run
+        axis is baked into the grid shape); a key of just
+        ``(devices, axis)`` would serve plan A's program to plan B."""
+        cfg = small(seed=97531).acs
+        plan_a = engine.ShardPlan(devices=1, axis=None, pad_runs=4)
+        plan_b = engine.ShardPlan(devices=1, axis=None, pad_runs=8)
+        fn_a = engine._grid_fn(cfg, False, "scan", plan_a)
+        fn_b = engine._grid_fn(cfg, False, "scan", plan_b)
+        assert fn_a is not fn_b
+        # same full plan -> same cached program (no retrace)
+        assert engine._grid_fn(cfg, False, "scan", plan_a) is fn_a
+        het_a = engine._het_grid_fn(cfg, False, "scan", plan_a)
+        het_b = engine._het_grid_fn(cfg, False, "scan", plan_b)
+        assert het_a is not het_b
+        assert engine._het_grid_fn(cfg, False, "scan", plan_a) is het_a
+
     def test_trace_counter_is_isolated(self):
         """Nested scopes see only their own compilations, and the
         legacy global counter still advances for old callers."""
