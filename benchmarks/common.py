@@ -12,10 +12,12 @@ import dataclasses
 import json
 import os
 import pathlib
+import subprocess
 import time
 from typing import Callable, Sequence
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 #: Fast-mode caps (CI smoke check: ``REPRO_BENCH_FAST=1``).
 FAST_MAX_RUNS = 3
@@ -68,6 +70,73 @@ def bench_scenario(scn, cap_steps: bool = True):
             scn, acs=dataclasses.replace(
                 scn.acs, n_steps=bench_steps(scn.acs.n_steps)))
     return scn
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        if out.returncode == 0 and sha:
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain"], cwd=REPO_ROOT,
+                capture_output=True, text=True, timeout=10)
+            return sha + ("-dirty" if dirty.stdout.strip() else "")
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def provenance() -> dict:
+    """Machine/run metadata stamped into every ``BENCH_*.json``: git
+    sha, jax version, device kind/count and backend mode.  Makes a
+    committed baseline's provenance auditable - the perf gate relaxes
+    tolerances when fresh and baseline numbers come from different
+    machines, and this block is how a reader tells which case a
+    comparison was."""
+    import jax
+    devices = jax.devices()
+    return {
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devices[0].device_kind if devices else "none",
+        "device_count": len(devices),
+        "fast_mode": fast_mode(),
+    }
+
+
+class PhaseClock:
+    """Wall-clock accounting per benchmark phase: ``with clock.phase(
+    "families"): ...`` accumulates seconds into ``clock.phases``,
+    serialized next to the provenance block so a regression in *setup*
+    cost (compiles, warmup, oracle replay) is visible even when the
+    timed rows stay flat."""
+
+    def __init__(self) -> None:
+        self.phases: dict = {}
+        self._t0 = time.perf_counter()
+
+    def phase(self, name: str):
+        clock = self
+
+        class _Phase:
+            def __enter__(self):
+                self.t0 = time.perf_counter()
+                return self
+
+            def __exit__(self, *exc):
+                clock.phases[name] = (clock.phases.get(name, 0.0)
+                                      + time.perf_counter() - self.t0)
+                return False
+
+        return _Phase()
+
+    def report(self) -> dict:
+        out = dict(self.phases)
+        out["total_s"] = time.perf_counter() - self._t0
+        return out
 
 
 @dataclasses.dataclass

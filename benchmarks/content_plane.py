@@ -35,7 +35,7 @@ import jax
 
 from benchmarks.common import (BenchRow, bench_points, bench_runs,
                                bench_steps, fast_mode, fmt_pct, md_table,
-                               write_results)
+                               provenance, write_results)
 from repro.sim import engine, workloads
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -140,6 +140,7 @@ def run() -> list[BenchRow]:
     payload = {
         "schema_version": 1,
         "fast_mode": fast_mode(),
+        "provenance": provenance(),
         "backend": jax.default_backend(),
         "devices": engine.shard_plan(
             len(FAMILIES) * len(loc_axis) * len(VOLATILITIES),

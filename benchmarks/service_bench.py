@@ -20,9 +20,17 @@ decision-plane *capacity* (actions / max-over-shards decide-busy, the
 makespan metric from ``LoadReport.capacity_dps``) scaling with K at
 unchanged savings.
 
-Writes ``BENCH_service.json`` at the repo root (schema v3 in
-``benchmarks/README.md``) so service latency/savings/capacity are
-tracked and perf-gated across PRs (``scripts/bench_gate.py``).
+The telemetry-overhead section runs the uniform family twice - once
+with the observability plane (``repro.obs``) disabled, once with it on
+- and records both latency profiles; the perf gate's ``[telemetry]``
+section enforces that telemetry-on p50/p99 stay within tolerance of
+telemetry-off on the same machine (``--telemetry`` picks which
+variants to measure).
+
+Writes ``BENCH_service.json`` at the repo root (schema v4 in
+``benchmarks/README.md``) so service latency/savings/capacity and the
+telemetry overhead are tracked and perf-gated across PRs
+(``scripts/bench_gate.py``).
 """
 
 from __future__ import annotations
@@ -34,8 +42,9 @@ import pathlib
 
 import jax
 
-from benchmarks.common import (BenchRow, bench_steps, fast_mode, fmt_pct,
-                               md_table, write_results)
+from benchmarks.common import (BenchRow, PhaseClock, bench_iters,
+                               bench_steps, fast_mode, fmt_pct, md_table,
+                               provenance, write_results)
 from repro.service import (BrokerConfig, CoherenceBroker, CoherenceConfig,
                            connect, drive_workload, verify_broker)
 from repro.service.batching import resolve_decide_backend
@@ -71,11 +80,11 @@ def _workload(family: str, n_rounds: int):
         seed=FAMILY_SEEDS[family])
 
 
-def _broker_config() -> BrokerConfig:
-    return BrokerConfig(
-        n_agents=N_CLIENTS,
-        artifacts=tuple(f"artifact-{d}" for d in range(N_ARTIFACTS)),
-        artifact_tokens=ARTIFACT_TOKENS, strategy=STRATEGY)
+def _broker_config(telemetry: bool = True) -> BrokerConfig:
+    return CoherenceConfig.make(
+        N_CLIENTS, tuple(f"artifact-{d}" for d in range(N_ARTIFACTS)),
+        artifact_tokens=ARTIFACT_TOKENS, strategy=STRATEGY,
+        telemetry=telemetry).broker_view()
 
 
 def _coherence_config(shards: int) -> CoherenceConfig:
@@ -100,15 +109,15 @@ async def _measure_family(family: str, n_rounds: int,
             "description": w.description,
             "effective_volatility": w.effective_volatility(),
             "actions": rep.n_actions,
-            "batches": stats["n_batches"],
-            "mean_batch": stats["mean_batch"],
+            "batches": stats["decision"]["n_batches"],
+            "mean_batch": stats["decision"]["mean_batch"],
             "throughput_dps": rep.throughput_dps,
             "p50_ms": rep.latency_ms(50),
             "p99_ms": rep.latency_ms(99),
             "coherent_tokens": rep.coherent_tokens,
             "broadcast_tokens": rep.broadcast_tokens,
             "savings_vs_broadcast": rep.savings_vs_broadcast,
-            "cache_hit_rate": stats["cache_hit_rate"],
+            "cache_hit_rate": stats["ledger"]["cache_hit_rate"],
         }
         return (row, dataclasses.astuple(broker.ledger),
                 broker if keep_broker else None)
@@ -132,6 +141,7 @@ async def _measure_sharded(family: str, n_rounds: int, shards: int,
             raise AssertionError(
                 f"sharded K={shards} {family}: ledger diverged from the "
                 f"plain broker ({ledger} vs {plain_ledger})")
+        l1 = stats.get("l1", {})
         row = {
             "family": family,
             "shards": shards,
@@ -141,12 +151,67 @@ async def _measure_sharded(family: str, n_rounds: int, shards: int,
             "savings_vs_broadcast": rep.savings_vs_broadcast,
             "capacity_dps": rep.capacity_dps,
             "decide_busy_s": list(rep.decide_busy_s),
-            "l1_fills": stats.get("l1_fills", 0),
-            "l2_fills": stats.get("l2_fills", 0),
-            "l1_fill_rate": stats.get("l1_fill_rate", 0.0),
+            "l1_fills": l1.get("l1_fills", 0),
+            "l2_fills": l1.get("l2_fills", 0),
+            "l1_fill_rate": l1.get("l1_fill_rate", 0.0),
             "bit_identical_to_plain": True,
         }
         return row, broker if keep_broker else None
+
+
+async def _measure_overhead(n_rounds: int, telemetry: bool) -> dict:
+    """One uniform-family run with the observability plane on or off.
+
+    Telemetry changes no static shapes, so both variants reuse the
+    decide program compiled by ``_warmup`` - the delta is pure Python
+    bookkeeping (counter increments, span records) on the hot path."""
+    w = _workload("uniform", n_rounds)
+    cfg = _broker_config(telemetry=telemetry)
+    async with CoherenceBroker(cfg) as broker:
+        rep = await drive_workload(broker, w, n_rounds,
+                                   seed=FAMILY_SEEDS["uniform"])
+        return {
+            "telemetry": telemetry,
+            "actions": rep.n_actions,
+            "throughput_dps": rep.throughput_dps,
+            "p50_ms": rep.latency_ms(50),
+            "p99_ms": rep.latency_ms(99),
+            "decide_busy_s": broker.decide_busy_s,
+            "savings_vs_broadcast": rep.savings_vs_broadcast,
+        }
+
+
+def _overhead_section(n_rounds: int, mode: str) -> dict:
+    """The telemetry-overhead rows: uniform family, telemetry off vs on,
+    median-of-repeats per variant.  ``mode`` in {both, on, off} picks
+    the variants; overhead ratios need both.  Each latency/throughput
+    field is the component-wise median across repeats - the tail (p99)
+    sees ~ms GC/scheduler spikes on either variant, and inheriting a
+    single row's unlucky tail would make the gate flap."""
+    variants = {"both": (False, True),
+                "off": (False,), "on": (True,)}[mode]
+    iters = bench_iters(5)
+    rows = []
+    for on in variants:
+        repeats = [asyncio.run(_measure_overhead(n_rounds, on))
+                   for _ in range(iters)]
+        mid = len(repeats) // 2
+        med = dict(sorted(repeats, key=lambda r: r["p50_ms"])[mid])
+        for field in ("p50_ms", "p99_ms", "throughput_dps"):
+            med[field] = sorted(r[field] for r in repeats)[mid]
+        med["repeats"] = len(repeats)
+        med["p50_ms_all"] = [r["p50_ms"] for r in repeats]
+        med["p99_ms_all"] = [r["p99_ms"] for r in repeats]
+        rows.append(med)
+    section = {"family": "uniform", "n_rounds": n_rounds,
+               "mode": mode, "rows": rows}
+    if len(variants) == 2:
+        off, on = rows[0], rows[1]
+        section["p50_overhead_frac"] = (on["p50_ms"] / off["p50_ms"]) - 1.0
+        section["p99_overhead_frac"] = (on["p99_ms"] / off["p99_ms"]) - 1.0
+        section["throughput_overhead_frac"] = (
+            1.0 - on["throughput_dps"] / off["throughput_dps"])
+    return section
 
 
 async def _warmup() -> None:
@@ -175,20 +240,28 @@ def _oracle_row(broker, name: str) -> dict:
     }
 
 
-def run() -> list:
+def run(telemetry_mode: str = "both") -> list:
     n_rounds = bench_steps(N_ROUNDS)
     cfg = _broker_config()
     decide_backend = resolve_decide_backend(cfg.acs_config())
-    asyncio.run(_warmup())
+    clock = PhaseClock()
+    with clock.phase("warmup"):
+        asyncio.run(_warmup())
 
     rows_payload, plain_ledgers = [], {}
     uniform_broker = None
-    for family in FAMILIES:
-        row, ledger, broker = asyncio.run(_measure_family(
-            family, n_rounds, keep_broker=(family == "uniform")))
-        rows_payload.append(row)
-        plain_ledgers[family] = ledger
-        uniform_broker = uniform_broker or broker
+    with clock.phase("families"):
+        for family in FAMILIES:
+            row, ledger, broker = asyncio.run(_measure_family(
+                family, n_rounds, keep_broker=(family == "uniform")))
+            rows_payload.append(row)
+            plain_ledgers[family] = ledger
+            uniform_broker = uniform_broker or broker
+
+    # telemetry overhead while the plain decide program is still warm
+    # (same static shape with telemetry on or off, so no extra compile).
+    with clock.phase("telemetry"):
+        telemetry_overhead = _overhead_section(n_rounds, telemetry_mode)
 
     # sharded plane: every family at K=SHARD_KS[-1] must be
     # bit-identical to its plain run (asserted inside), the uniform
@@ -200,35 +273,37 @@ def run() -> list:
     # between modules).  Each section re-warms its own programs, so
     # the timed rows never include a compile.
     k_max = SHARD_KS[-1]
-    jax.clear_caches()
-    asyncio.run(_warmup_sharded(k_max))
-    sharded_rows, sharded_uniform_broker = [], None
-    for family in FAMILIES:
-        row, broker = asyncio.run(_measure_sharded(
-            family, n_rounds, k_max, plain_ledgers[family],
-            keep_broker=(family == "uniform")))
-        sharded_rows.append(row)
-        sharded_uniform_broker = sharded_uniform_broker or broker
-    scaling_rows = []
-    for k in SHARD_KS:
-        if k == k_max:
-            continue
+    with clock.phase("sharded"):
         jax.clear_caches()
-        asyncio.run(_warmup_sharded(k))
-        scaling_rows.append(asyncio.run(_measure_sharded(
-            "uniform", n_rounds, k, plain_ledgers["uniform"]))[0])
-    scaling_rows.append(sharded_rows[0])
-    scaling_rows.sort(key=lambda r: r["shards"])
+        asyncio.run(_warmup_sharded(k_max))
+        sharded_rows, sharded_uniform_broker = [], None
+        for family in FAMILIES:
+            row, broker = asyncio.run(_measure_sharded(
+                family, n_rounds, k_max, plain_ledgers[family],
+                keep_broker=(family == "uniform")))
+            sharded_rows.append(row)
+            sharded_uniform_broker = sharded_uniform_broker or broker
+        scaling_rows = []
+        for k in SHARD_KS:
+            if k == k_max:
+                continue
+            jax.clear_caches()
+            asyncio.run(_warmup_sharded(k))
+            scaling_rows.append(asyncio.run(_measure_sharded(
+                "uniform", n_rounds, k, plain_ledgers["uniform"]))[0])
+        scaling_rows.append(sharded_rows[0])
+        scaling_rows.sort(key=lambda r: r["shards"])
 
     # oracle replays last, each against a fresh code arena: the
     # four-way legs (pallas interpret + model check) are the biggest
     # compiles of the whole bench.
-    jax.clear_caches()
-    rows_payload[0]["oracle_replay"] = _oracle_row(
-        uniform_broker, "service:uniform")
-    jax.clear_caches()
-    sharded_rows[0]["oracle_replay"] = _oracle_row(
-        sharded_uniform_broker, f"service:uniform:K{k_max}")
+    with clock.phase("oracle"):
+        jax.clear_caches()
+        rows_payload[0]["oracle_replay"] = _oracle_row(
+            uniform_broker, "service:uniform")
+        jax.clear_caches()
+        sharded_rows[0]["oracle_replay"] = _oracle_row(
+            sharded_uniform_broker, f"service:uniform:K{k_max}")
 
     accept_row = rows_payload[0]
     assert accept_row["family"] == "uniform"
@@ -239,8 +314,10 @@ def run() -> list:
             f"{MIN_ACCEPT_SAVINGS}")
 
     payload = {
-        "schema_version": 3,
+        "schema_version": 4,
         "fast_mode": fast_mode(),
+        "provenance": provenance(),
+        "phases": clock.report(),
         "backend": jax.default_backend(),
         "decide_backend": decide_backend,
         "grid": {
@@ -258,6 +335,7 @@ def run() -> list:
             "families": sharded_rows,
             "uniform_scaling": scaling_rows,
         },
+        "telemetry_overhead": telemetry_overhead,
         "acceptance": {
             "family": "uniform",
             "volatility": 0.10,
@@ -307,6 +385,23 @@ def run() -> list:
           f"run; the uniform K={k_max} trace additionally replayed "
           f"through the cross-shard + L1/L2 conformance legs.\n")
 
+    tel_table = [[("on" if r["telemetry"] else "off"),
+                  f"{r['throughput_dps']:,.0f}",
+                  f"{r['p50_ms']:.3f}", f"{r['p99_ms']:.3f}",
+                  f"{r['decide_busy_s']:.3f}"]
+                 for r in telemetry_overhead["rows"]]
+    md += ("\n### Telemetry overhead - uniform family, obs plane "
+           "off vs on\n\n"
+           + md_table(["telemetry", "decisions/s", "p50 ms", "p99 ms",
+                       "decide busy s"], tel_table))
+    if "p50_overhead_frac" in telemetry_overhead:
+        md += (f"\np50 overhead "
+               f"{telemetry_overhead['p50_overhead_frac']:+.1%}, p99 "
+               f"{telemetry_overhead['p99_overhead_frac']:+.1%} "
+               f"(median of {telemetry_overhead['rows'][0]['repeats']} "
+               f"repeats; gate: within 10% + absolute epsilon, "
+               f"``scripts/bench_gate.py [telemetry]``).\n")
+
     rows = [BenchRow(
         name=f"service/{r['family']}",
         us_per_call=1e6 / max(r["throughput_dps"], 1e-9),
@@ -319,10 +414,22 @@ def run() -> list:
         derived=(f"savings={r['savings_vs_broadcast'] * 100:.1f}% "
                  f"l1_rate={r['l1_fill_rate'] * 100:.1f}%"))
         for r in scaling_rows]
+    rows += [BenchRow(
+        name=f"service/telemetry_{'on' if r['telemetry'] else 'off'}",
+        us_per_call=1e6 / max(r["throughput_dps"], 1e-9),
+        derived=f"p50={r['p50_ms']:.3f}ms p99={r['p99_ms']:.3f}ms")
+        for r in telemetry_overhead["rows"]]
     write_results("service_bench", rows, md, extra=payload)
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    parser = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    parser.add_argument(
+        "--telemetry", choices=("both", "on", "off"), default="both",
+        help="which observability variants the overhead section "
+             "measures (overhead ratios need 'both')")
+    args = parser.parse_args()
+    for r in run(telemetry_mode=args.telemetry):
         print(r.csv())

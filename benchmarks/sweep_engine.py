@@ -29,7 +29,7 @@ import jax
 
 from benchmarks.common import (BenchRow, bench_iters, bench_points,
                                bench_scenario, fast_mode, md_table,
-                               write_results)
+                               provenance, write_results)
 from repro.core import acs
 from repro.sim import cliff_scenario, resolve_tick_backend, sweep_volatility
 from repro.sim import engine
@@ -121,6 +121,7 @@ def run() -> list[BenchRow]:
     payload = {
         "schema_version": 2,
         "fast_mode": fast_mode(),
+        "provenance": provenance(),
         "grid": {
             "volatilities": list(_vols()),
             "strategies": ["broadcast", "lazy"],

@@ -22,7 +22,7 @@ import jax
 
 from benchmarks.common import (BenchRow, bench_iters, bench_runs,
                                bench_steps, fast_mode, fmt_pct, md_table,
-                               write_results)
+                               provenance, write_results)
 from repro.sim import engine, resolve_tick_backend, workloads
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -90,6 +90,7 @@ def run() -> list[BenchRow]:
     payload = {
         "schema_version": 2,
         "fast_mode": fast_mode(),
+        "provenance": provenance(),
         "grid": {
             "families": [w.family for w in zoo],
             "n_agents": N_AGENTS,

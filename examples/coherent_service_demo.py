@@ -91,22 +91,25 @@ def main(argv=None) -> dict:
 
         broker = portal.broker
         stats = broker.stats()
+        decision, ledger = stats["decision"], stats["ledger"]
         n, m = 4, len(ARTIFACTS)
-        broadcast = stats["n_batches"] * n * m * (artifact_tokens + 12)
-        savings = 1.0 - stats["total_tokens"] / max(broadcast, 1)
-        print(f"\n{stats['n_actions']} actions in "
-              f"{stats['n_batches']} micro-batches "
-              f"(mean batch {stats['mean_batch']:.1f}); "
-              f"{stats['total_tokens']} tokens vs {broadcast} broadcast "
-              f"= {savings:.1%} saved; "
-              f"cache-hit rate {stats['cache_hit_rate']:.1%}")
-        if "n_shards" in stats:
-            print(f"authority plane: {stats['n_shards']} shards "
-                  f"(artifacts per shard {stats['shard_artifacts']}), "
-                  f"{stats['n_hosts']} L1 hosts; "
-                  f"{stats['l1_fills']} fills served host-locally vs "
-                  f"{stats['l2_fills']} from L2 "
-                  f"(L1 fill rate {stats['l1_fill_rate']:.1%})")
+        broadcast = (decision["n_batches"] * n * m
+                     * (artifact_tokens + 12))
+        savings = 1.0 - ledger["total_tokens"] / max(broadcast, 1)
+        print(f"\n{decision['n_actions']} actions in "
+              f"{decision['n_batches']} micro-batches "
+              f"(mean batch {decision['mean_batch']:.1f}); "
+              f"{ledger['total_tokens']} tokens vs {broadcast} "
+              f"broadcast = {savings:.1%} saved; "
+              f"cache-hit rate {ledger['cache_hit_rate']:.1%}")
+        if "l1" in stats:
+            topo, l1 = stats["topology"], stats["l1"]
+            print(f"authority plane: {topo['n_shards']} shards "
+                  f"(artifacts per shard {topo['shard_artifacts']}), "
+                  f"{topo['n_hosts']} L1 hosts; "
+                  f"{l1['l1_fills']} fills served host-locally vs "
+                  f"{l1['l2_fills']} from L2 "
+                  f"(L1 fill rate {l1['l1_fill_rate']:.1%})")
 
         report = verify_broker(broker, name="service:demo")
         print(f"oracle replay: bit-exact across "

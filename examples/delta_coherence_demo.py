@@ -97,11 +97,12 @@ async def main(n_rounds: int) -> None:
         await edit_review_rounds(broker, n_rounds)
 
         stats = broker.stats()
-        full = stats["full_bytes"]
-        delta = stats["delta_bytes"]
+        wire = stats["wire"]
+        full = wire["full_bytes"]
+        delta = wire["delta_bytes"]
         print(f"\nbytes-on-wire: delta {delta:,} vs whole-artifact "
-              f"lazy {full:,} ({stats['bytes_savings_vs_full']:.1%} "
-              f"saved; {stats['unique_chunks']} unique chunks stored)")
+              f"lazy {full:,} ({wire['bytes_savings_vs_full']:.1%} "
+              f"saved; {wire['unique_chunks']} unique chunks stored)")
         assert delta < full
 
         report = verify_broker(broker, name="delta-demo")

@@ -43,6 +43,16 @@ Checks (see ``--help`` for every tolerance knob):
                capacity monotone in K (--shard-capacity-tol per step,
                gated within the fresh payload - capacity is
                machine-dependent)
+  telemetry    observability plane must be near-free: telemetry-on
+               p50/p99 <= telemetry-off x (1 + --telemetry-overhead-tol)
+               + --telemetry-abs-eps-ms.  Both variants come from the
+               SAME fresh payload (same machine, same warmed program),
+               so this is gated same- and cross-mode alike; the
+               --inject-telemetry-overhead self-test proves the
+               comparator can see a hot-path slowdown.  A fast-mode
+               payload's rows are single-repeat noise, so there the
+               bound degrades to the --latency-factor pathology
+               ceiling.
 """
 
 from __future__ import annotations
@@ -122,7 +132,7 @@ def _run_benches() -> dict:
 
 def _inject(fresh: dict, throughput_pct: float, savings_drift: float,
             latency_factor: float, bytes_pct: float = 0.0,
-            shard_pct: float = 0.0) -> dict:
+            shard_pct: float = 0.0, telemetry_pct: float = 0.0) -> dict:
     """Apply a synthetic regression to the fresh payloads (gate
     self-test: the comparator must flag it)."""
     f = json.loads(json.dumps(fresh, default=float))  # deep copy
@@ -166,6 +176,21 @@ def _inject(fresh: dict, throughput_pct: float, savings_drift: float,
                          key=lambda r: r["shards"])
         for prev, cur in zip(scaling, scaling[1:]):
             cur["capacity_dps"] = prev["capacity_dps"] * (1.0 - shard_pct)
+    if telemetry_pct:
+        # slow down the telemetry-on hot path: the on-row latencies
+        # bloat by (1+PCT) and the derived overhead fractions are
+        # recomputed - red for any PCT > --telemetry-overhead-tol
+        tel = f["service"].get("telemetry_overhead", {})
+        rows = {bool(r["telemetry"]): r for r in tel.get("rows", ())}
+        if True in rows and False in rows:
+            on, off = rows[True], rows[False]
+            on["p50_ms"] *= (1.0 + telemetry_pct)
+            on["p99_ms"] *= (1.0 + telemetry_pct)
+            on["throughput_dps"] /= (1.0 + telemetry_pct)
+            tel["p50_overhead_frac"] = (on["p50_ms"] / off["p50_ms"]) - 1.0
+            tel["p99_overhead_frac"] = (on["p99_ms"] / off["p99_ms"]) - 1.0
+            tel["throughput_overhead_frac"] = (
+                1.0 - on["throughput_dps"] / off["throughput_dps"])
     return f
 
 
@@ -343,6 +368,45 @@ def run_gate(fresh: dict, base: dict, args) -> int:
                        f"K={scaling[0]['shards']} "
                        f"{scaling[0]['capacity_dps']:.1f}")
 
+    # --- telemetry overhead: both variants live in the SAME fresh
+    # payload (same machine, same warmed decide program), so absolute
+    # latency noise cancels and the bound holds cross-mode too.  The
+    # tight bound needs the full grid's repeated/medianed rows; a
+    # fast-mode payload measures ONE repeat of a tiny grid (pure
+    # scheduler noise), so there the check degrades to the same
+    # pathology factor the absolute latency check uses.
+    fast_rows = bool(fsv.get("fast_mode"))
+    if fast_rows:
+        tel_factor = args.latency_factor
+        eps = args.telemetry_abs_eps_ms
+        print(f"[telemetry]  on <= off x {tel_factor:.1f} "
+              f"(fast-mode payload: single-repeat rows, pathology "
+              f"bound only) + {eps:.3f}ms abs")
+    else:
+        tel_factor = 1.0 + args.telemetry_overhead_tol
+        eps = args.telemetry_abs_eps_ms
+        print(f"[telemetry]  on <= off x (1 + "
+              f"{args.telemetry_overhead_tol:.0%}) + {eps:.3f}ms abs")
+    tel = fsv.get("telemetry_overhead", {})
+    t_rows = {bool(r["telemetry"]): r for r in tel.get("rows", ())}
+    gate.check(True in t_rows and False in t_rows,
+               "telemetry.section",
+               "fresh payload carries telemetry-off AND telemetry-on "
+               f"rows (got modes {sorted(t_rows)})")
+    if True in t_rows and False in t_rows:
+        on, off = t_rows[True], t_rows[False]
+        for pct in ("p50_ms", "p99_ms"):
+            ceiling = off[pct] * tel_factor + eps
+            gate.check(on[pct] <= ceiling,
+                       f"telemetry.{pct}",
+                       f"on {on[pct]:.3f} <= {ceiling:.3f} "
+                       f"(off {off[pct]:.3f})")
+        gate.check(on.get("savings_vs_broadcast")
+                   == off.get("savings_vs_broadcast"),
+                   "telemetry.savings_invariant",
+                   "token accounting identical with the obs plane on "
+                   f"({on.get('savings_vs_broadcast'):.4f})")
+
     # --- content plane: delta coherence byte savings
     fc, bc = fresh["content"], base["content"]
     print(f"[content]  delta < full < broadcast on every cell; "
@@ -438,6 +502,11 @@ def main(argv=None) -> int:
                     help="make each shard-count step LOSE PCT capacity "
                     "vs its predecessor - the gate must go red for "
                     "PCT > --shard-capacity-tol (self-test)")
+    ap.add_argument("--inject-telemetry-overhead", type=float,
+                    default=0.0, metavar="PCT",
+                    help="bloat the telemetry-on row's p50/p99 by "
+                    "(1+PCT) - the gate must go red for PCT > "
+                    "--telemetry-overhead-tol (self-test)")
     ap.add_argument("--savings-tol", type=float, default=0.005,
                     help="same-grid per-family savings tolerance, "
                     "absolute (default 0.005 - savings are "
@@ -483,6 +552,14 @@ def main(argv=None) -> int:
                     "absolute tolerance of the plain rows (ledgers are "
                     "bit-identical, so drift can only come from batch "
                     "accounting)")
+    ap.add_argument("--telemetry-overhead-tol", type=float, default=0.10,
+                    help="telemetry-on p50/p99 must stay within this "
+                    "relative fraction of telemetry-off (same payload, "
+                    "same machine - the obs hot path must be near-free)")
+    ap.add_argument("--telemetry-abs-eps-ms", type=float, default=0.05,
+                    help="absolute epsilon (ms) added to the telemetry "
+                    "latency ceiling - guards sub-ms baselines against "
+                    "scheduler jitter flakes")
     args = ap.parse_args(argv)
 
     base = {k: _load(p) for k, p in BASELINES.items()}
@@ -500,18 +577,21 @@ def main(argv=None) -> int:
     if (args.inject_throughput_regression or args.inject_savings_drift
             or args.inject_latency_regression != 1.0
             or args.inject_bytes_regression
-            or args.inject_shard_regression):
+            or args.inject_shard_regression
+            or args.inject_telemetry_overhead):
         print(f"bench-gate: INJECTING synthetic regression "
               f"(throughput -{args.inject_throughput_regression:.0%}, "
               f"savings -{args.inject_savings_drift}, "
               f"latency x{args.inject_latency_regression:.1f}, "
               f"delta bytes +{args.inject_bytes_regression:.0%}, "
-              f"shard capacity -{args.inject_shard_regression:.0%}/step)")
+              f"shard capacity -{args.inject_shard_regression:.0%}/step, "
+              f"telemetry +{args.inject_telemetry_overhead:.0%})")
         fresh = _inject(fresh, args.inject_throughput_regression,
                         args.inject_savings_drift,
                         args.inject_latency_regression,
                         args.inject_bytes_regression,
-                        args.inject_shard_regression)
+                        args.inject_shard_regression,
+                        args.inject_telemetry_overhead)
 
     return run_gate(fresh, base, args)
 

@@ -8,6 +8,8 @@
 #   - runs the sweep-engine + table + coherence-service + content-plane
 #     benches in REPRO_BENCH_FAST mode (shrunk n_runs/n_steps/rounds;
 #     completes in well under a minute)
+#   - runs the metrics-conformance smoke (launcher --verify-metrics:
+#     live telemetry counters bit-compared against a trace replay)
 #   - replays the committed BENCH baselines through the perf gate
 #     (plumbing check; CI's bench-gate job does the fresh-run gating)
 set -euo pipefail
@@ -34,6 +36,11 @@ python -m pytest -x -q
 echo
 echo "== smoke benches (REPRO_BENCH_FAST=1) =="
 REPRO_BENCH_FAST=1 python -m benchmarks.run sweep table1 table2 cliff zoo service content
+
+echo
+echo "== metrics conformance smoke (--verify-metrics) =="
+python -m repro.launch.service --family uniform --clients 6 --artifacts 3 \
+  --artifact-tokens 32 --rounds 6 --verify-metrics
 
 echo
 echo "== bench gate (baseline replay) =="

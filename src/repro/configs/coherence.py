@@ -70,6 +70,11 @@ class ServiceLayer:
     check_invariants: bool = True
     capture_trace: bool = True
     latency_window: int = 1 << 20
+    #: the telemetry plane (``repro.obs``): MESI perf counters, span
+    #: tracing and the metrics-conformance oracle leg.  Off = the
+    #: broker records nothing beyond the ledger/trace it always kept
+    #: (the overhead bench measures the difference).
+    telemetry: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +275,7 @@ def from_broker_fields(n_agents: int, artifacts, *, artifact_tokens,
                        strategy, access_k, max_stale_steps, batch_window,
                        max_batch, backend, check_invariants,
                        capture_trace, latency_window, chunk_tokens,
+                       telemetry: bool = True,
                        topology: Optional[ShardTopology] = None,
                        ) -> CoherenceConfig:
     """Lift legacy flat ``BrokerConfig`` fields into the layered config
@@ -283,5 +289,6 @@ def from_broker_fields(n_agents: int, artifacts, *, artifact_tokens,
         service=ServiceLayer(
             batch_window=batch_window, max_batch=max_batch,
             backend=backend, check_invariants=check_invariants,
-            capture_trace=capture_trace, latency_window=latency_window),
+            capture_trace=capture_trace, latency_window=latency_window,
+            telemetry=telemetry),
         topology=topology or ShardTopology())

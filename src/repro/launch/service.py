@@ -14,6 +14,7 @@ TCP frontend (one JSON object per line, newline-terminated replies)::
               {"op": "write", "agent": 0, "artifact": "a0",
                "content": [1, 2, ...]}            # optional content
               {"op": "stats"}
+              {"op": "metrics"}   # Prometheus text + registry snapshot
     reply   : {"ok": true, "version": 3, "hit": false,
                "content": [...]} | {"ok": false, "error": "..."}
 
@@ -93,6 +94,16 @@ async def handle_connection(broker: CoherenceBroker,
                     reply = {"ok": True, "version": w.version}
                 elif op == "stats":
                     reply = {"ok": True, "stats": broker.stats()}
+                elif op == "metrics":
+                    tel = getattr(broker, "telemetry", None)
+                    if tel is None:
+                        reply = {"ok": False,
+                                 "error": "telemetry disabled "
+                                          "(telemetry=False)"}
+                    else:
+                        reply = {"ok": True,
+                                 "prometheus": tel.prometheus(),
+                                 "snapshot": tel.snapshot()}
                 else:
                     reply = {"ok": False,
                              "error": f"unknown op {op!r}"}
@@ -131,7 +142,8 @@ async def run_load(args) -> dict:
     cfg = CoherenceConfig.make(
         args.clients, artifact_names(args.artifacts),
         artifact_tokens=args.artifact_tokens, strategy=args.strategy,
-        backend=args.backend, shards=args.shards, hosts=args.hosts)
+        backend=args.backend, shards=args.shards, hosts=args.hosts,
+        telemetry=not args.no_telemetry)
     async with connect(cfg) as broker:
         rep = await drive_workload(broker, w, args.rounds,
                                    seed=args.seed,
@@ -142,8 +154,9 @@ async def run_load(args) -> dict:
             "family": w.family, "workload": w.name,
             "strategy": args.strategy, "backend": stats["backend"],
             "clients": args.clients, "rounds": rep.n_rounds,
-            "actions": rep.n_actions, "batches": stats["n_batches"],
-            "mean_batch": round(stats["mean_batch"], 2),
+            "actions": rep.n_actions,
+            "batches": stats["decision"]["n_batches"],
+            "mean_batch": round(stats["decision"]["mean_batch"], 2),
             "throughput_dps": round(rep.throughput_dps, 1),
             "capacity_dps": round(rep.capacity_dps, 1),
             "p50_ms": round(rep.latency_ms(50), 3),
@@ -151,15 +164,18 @@ async def run_load(args) -> dict:
             "coherent_tokens": rep.coherent_tokens,
             "broadcast_tokens": rep.broadcast_tokens,
             "savings_vs_broadcast": round(rep.savings_vs_broadcast, 4),
-            "cache_hit_rate": round(stats["cache_hit_rate"], 4),
+            "cache_hit_rate": round(stats["ledger"]["cache_hit_rate"],
+                                    4),
         }
         if args.shards > 1 or args.hosts > 1:
+            topo = stats["topology"]
+            l1 = stats["l1"]
             summary.update({
-                "shards": stats["n_shards"], "hosts": stats["n_hosts"],
-                "shard_artifacts": list(stats["shard_artifacts"]),
-                "l1_fills": stats["l1_fills"],
-                "l2_fills": stats["l2_fills"],
-                "l1_fill_rate": round(stats["l1_fill_rate"], 4),
+                "shards": topo["n_shards"], "hosts": topo["n_hosts"],
+                "shard_artifacts": list(topo["shard_artifacts"]),
+                "l1_fills": l1["l1_fills"],
+                "l2_fills": l1["l2_fills"],
+                "l1_fill_rate": round(l1["l1_fill_rate"], 4),
             })
         if args.trace_out:
             pathlib.Path(args.trace_out).write_text(
@@ -172,6 +188,10 @@ async def run_load(args) -> dict:
                 "implementations": list(report.implementations),
                 "n_actions": report.trace.n_actions,
             }
+        if args.verify_metrics:
+            from repro.obs import check_metrics_conformance
+            summary["metrics_conformance"] = check_metrics_conformance(
+                broker, name=f"metrics:{w.family}")
         return summary
 
 
@@ -231,6 +251,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--verify", action="store_true",
                     help="replay the captured trace through the "
                     "four-way differential oracle before exiting")
+    ap.add_argument("--verify-metrics", action="store_true",
+                    help="replay the captured trace through a fresh "
+                    "telemetry plane and assert every replayable "
+                    "counter bit-identical to the live registry "
+                    "(repro.obs.conformance)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="run with the telemetry plane disabled (the "
+                    "overhead baseline)")
     ap.add_argument("--tcp", type=int, default=None, metavar="PORT",
                     help="serve the JSON-lines TCP frontend instead of "
                     "running the load generator")

@@ -1,0 +1,62 @@
+"""``repro.obs`` - the coherence telemetry plane.
+
+MESI perf counters, per-request span tracing and oracle-verified
+metrics for the live coherence service:
+
+  * :mod:`repro.obs.registry` - exact counters / gauges / ring-buffer
+    histograms with Prometheus text + JSON snapshot exposition;
+  * :mod:`repro.obs.telemetry` - the per-authority ``Telemetry``
+    facade: one ``record_batch`` hook per committed micro-batch feeds
+    the MESI detectors (invalidation events/storms, ping-pong,
+    staleness-at-serve, state occupancy) and the span recorder;
+  * :mod:`repro.obs.spans` - Chrome trace-event export
+    (``chrome://tracing`` / Perfetto flame graphs);
+  * :mod:`repro.obs.runtime` - process-global jit/Pallas compile-event
+    log (trace-time side-effect accounting, engine-style);
+  * :mod:`repro.obs.stats` - the unified ``stats()`` schema both
+    broker flavors serve (with the legacy flat-key deprecation shim);
+  * :mod:`repro.obs.conformance` - the ``MetricsConformance`` oracle
+    leg: every replayable counter recomputed from the captured
+    ``ServiceTrace`` and asserted bit-identical to the live registry.
+
+See ``docs/observability.md`` for the metric catalog and the
+MESI-analogue rationale behind each counter.
+"""
+
+from repro.obs.conformance import (CONFORMANCE_COUNTERS,
+                                   CONFORMANCE_HISTOGRAMS,
+                                   MetricsConformanceError,
+                                   check_metrics_conformance,
+                                   replay_telemetry)
+from repro.obs.registry import (Counter, Gauge, Histogram,
+                                MetricsRegistry)
+from repro.obs.runtime import (compile_count, compile_events,
+                               note_compile, note_warmup,
+                               reset_compile_log)
+from repro.obs.spans import Span, SpanRecorder
+from repro.obs.stats import LEGACY_KEYS, StatsView, unified_stats
+from repro.obs.telemetry import BatchObservation, Telemetry
+
+__all__ = [
+    "BatchObservation",
+    "CONFORMANCE_COUNTERS",
+    "CONFORMANCE_HISTOGRAMS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LEGACY_KEYS",
+    "MetricsConformanceError",
+    "MetricsRegistry",
+    "Span",
+    "SpanRecorder",
+    "StatsView",
+    "Telemetry",
+    "check_metrics_conformance",
+    "compile_count",
+    "compile_events",
+    "note_compile",
+    "note_warmup",
+    "replay_telemetry",
+    "reset_compile_log",
+    "unified_stats",
+]

@@ -1,0 +1,70 @@
+"""jit / Pallas instrumentation: process-global compile-event log.
+
+The decision deciders are cached per static config at module level
+(``repro.service.batching._scan_decider``'s ``lru_cache`` + jax's own
+jit cache), so compile accounting is inherently *process*-scoped, not
+per-broker - the same pattern as the sweep engine's trace counter
+(``repro.sim.engine.trace_count``): a Python side effect placed inside
+the traced function body runs exactly once per (re)trace and never
+during compiled execution.
+
+``note_compile`` is that side effect for the service plane;
+``note_warmup`` records the measured first-call wall time of a decision
+route (the closest portable proxy for Pallas route compilation, whose
+lowering happens inside ``pallas_call`` where we own no Python body).
+Telemetry snapshots read the log; the conformance leg excludes it
+(compiles are process-global and timing-dependent by nature).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional
+
+_LOCK = threading.Lock()
+_EVENTS: List[dict] = []
+#: perf_counter epoch for event timestamps (Chrome trace alignment)
+_T0 = time.perf_counter()
+
+
+def epoch() -> float:
+    """perf_counter value this module's event timestamps are relative
+    to (for aligning compile events onto a span recorder's axis)."""
+    return _T0
+
+
+def note_compile(route: str, label: str = "") -> None:
+    """Record one decision-program (re)trace.  Call from *inside* the
+    traced function body so it fires at trace time only."""
+    with _LOCK:
+        _EVENTS.append({"kind": "trace", "route": route, "label": label,
+                        "t_s": time.perf_counter() - _T0,
+                        "dur_s": 0.0})
+
+
+def note_warmup(route: str, dur_s: float, label: str = "") -> None:
+    """Record a decision route's measured first-call wall time (compile
+    + first dispatch)."""
+    with _LOCK:
+        _EVENTS.append({"kind": "warmup", "route": route, "label": label,
+                        "t_s": time.perf_counter() - _T0 - dur_s,
+                        "dur_s": dur_s})
+
+
+def compile_events() -> List[dict]:
+    with _LOCK:
+        return [dict(e) for e in _EVENTS]
+
+
+def compile_count(route: Optional[str] = None,
+                  kind: str = "trace") -> int:
+    with _LOCK:
+        return sum(1 for e in _EVENTS
+                   if e["kind"] == kind
+                   and (route is None or e["route"] == route))
+
+
+def reset_compile_log() -> None:
+    with _LOCK:
+        _EVENTS.clear()

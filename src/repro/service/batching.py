@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import functools
 import os
+import time
 from typing import NamedTuple
 
 import jax
@@ -39,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import acs
+from repro.obs import runtime as obs_runtime
 from repro.kernels.backend import interpret_default
 from repro.kernels.chunk_diff import (chunk_tick_pallas, chunk_tick_ref,
                                       resolve_chunk_route)
@@ -95,12 +97,19 @@ def _scan_decider(cfg: acs.ACSConfig):
     configs the pass also carries the content plane (the per-agent
     dirty chunk masks become a traced operand)."""
 
+    label = (f"agents={cfg.n_agents} artifacts={cfg.n_artifacts} "
+             f"strategy={acs.STRATEGY_NAMES[cfg.strategy]}")
+
     if acs.content_enabled(cfg):
         def fn(arrays, met, acts, arts, writes, write_chunks):
+            # trace-time side effect: fires once per (re)trace, never
+            # during compiled execution (engine trace-counter pattern)
+            obs_runtime.note_compile("scan", label)
             return acs.apply_actions(cfg, arrays, met, acts, arts,
                                      writes, write_chunks=write_chunks)
     else:
         def fn(arrays, met, acts, arts, writes):
+            obs_runtime.note_compile("scan", label)
             return acs.apply_actions(cfg, arrays, met, acts, arts,
                                      writes)
 
@@ -145,6 +154,7 @@ class BatchDecider:
             self.metrics = jax.device_put(self.metrics, device)
         self._scan = _scan_decider(cfg) if self.backend == "scan" else None
         self._deciding = False
+        self._warmed = False
 
     # ------------------------------------------------------------------
     def decide(self, acts: np.ndarray, arts: np.ndarray,
@@ -162,12 +172,22 @@ class BatchDecider:
         if acs.content_enabled(self.cfg) and write_chunks is None:
             raise ValueError("chunked decider needs write_chunks masks")
         self._deciding = True
+        t0 = time.perf_counter()
         try:
             if self.backend == "scan":
                 return self._decide_scan(acts, arts, writes,
                                          write_chunks)
             return self._decide_pallas(acts, arts, writes, write_chunks)
         finally:
+            if not self._warmed:
+                # first-call wall time = compile + first dispatch (the
+                # portable proxy for Pallas lowering, which happens
+                # inside pallas_call where we own no Python body)
+                self._warmed = True
+                obs_runtime.note_warmup(
+                    self.backend, time.perf_counter() - t0,
+                    f"agents={self.cfg.n_agents} "
+                    f"artifacts={self.cfg.n_artifacts}")
             self._deciding = False
 
     # ------------------------------------------------------------------

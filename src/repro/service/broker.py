@@ -41,6 +41,8 @@ from repro.core import acs, invariants
 from repro.core.protocol import (ArtifactStore, EventBus, Message,
                                  TokenLedger)
 from repro.core.states import MESIState
+from repro.obs.stats import unified_stats
+from repro.obs.telemetry import BatchObservation, Telemetry
 from repro.service.batching import BatchDecider
 from repro.service.trace import ServiceTrace
 
@@ -114,6 +116,10 @@ class BrokerConfig:
     #: diff, and a read miss ships only the reader's stale chunks
     #: (``ReadResult.delta``).  0 = whole-artifact payloads.
     chunk_tokens: int = 0
+    #: telemetry plane (``repro.obs``): MESI perf counters, span
+    #: tracing and the metrics-conformance oracle leg.  Off = the
+    #: broker keeps only the ledger/trace it always kept.
+    telemetry: bool = True
 
     def __post_init__(self):
         if not _VIEW_CONSTRUCTION.get():
@@ -172,7 +178,8 @@ class BrokerConfig:
                 check_invariants=coherence.service.check_invariants,
                 capture_trace=coherence.service.capture_trace,
                 latency_window=coherence.service.latency_window,
-                chunk_tokens=coherence.core.chunk_tokens)
+                chunk_tokens=coherence.core.chunk_tokens,
+                telemetry=coherence.service.telemetry)
         finally:
             _VIEW_CONSTRUCTION.reset(token)
 
@@ -189,7 +196,8 @@ class BrokerConfig:
             check_invariants=self.check_invariants,
             capture_trace=self.capture_trace,
             latency_window=self.latency_window,
-            chunk_tokens=self.chunk_tokens)
+            chunk_tokens=self.chunk_tokens,
+            telemetry=self.telemetry)
 
 
 class ReadResult(NamedTuple):
@@ -238,7 +246,8 @@ class CoherenceBroker:
     def __init__(self, config: BrokerConfig,
                  contents: Optional[Dict[str, Sequence[int]]] = None,
                  *, on_commit: Optional[Callable] = None,
-                 device=None) -> None:
+                 device=None, telemetry: Optional[Telemetry] = None,
+                 shard: int = 0) -> None:
         if hasattr(config, "broker_view"):   # layered CoherenceConfig
             if not config.topology.trivial:
                 raise ValueError(
@@ -261,6 +270,18 @@ class CoherenceBroker:
         #: (the serialized per-authority bottleneck the shard-capacity
         #: metric is built on)
         self.decide_busy_s = 0.0
+        #: shard label this authority stamps on its metrics (the
+        #: sharded plane passes its shard id; standalone brokers are
+        #: shard 0 - the same label the conformance replay uses)
+        self.shard = int(shard)
+        #: the telemetry plane handle (None = disabled).  A sharded
+        #: deployment hands ONE shared ``Telemetry`` to every
+        #: sub-broker; a standalone broker builds its own.
+        self.telemetry: Optional[Telemetry] = telemetry
+        if self.telemetry is None and config.telemetry:
+            self.telemetry = Telemetry(
+                config.n_agents, strategy=config.strategy,
+                backend=self.decider.backend)
         self.bus = EventBus()
         self.store = ArtifactStore()
         for name in self.names:
@@ -442,6 +463,11 @@ class CoherenceBroker:
             writes[req.agent] = req.is_write
         wmasks = self._measure_write_masks(batch)
 
+        tel = self.telemetry
+        state_before = (np.asarray(self.decider.arrays.state,
+                                   np.int32).copy()
+                        if tel is not None else None)
+        queue_depth = len(batch) + len(self._pending)
         ver_before = np.asarray(self.decider.arrays.version,
                                 np.int64).copy()
         t_decide = time.perf_counter()
@@ -509,7 +535,25 @@ class CoherenceBroker:
         if self.config.capture_trace:
             self.trace.append_step(acts, arts, writes, decision.miss,
                                    decision.version, latencies,
-                                   write_chunks=wmasks)
+                                   write_chunks=wmasks,
+                                   decide_s=busy_s,
+                                   batch_size=len(batch))
+        if tel is not None:
+            tel.record_batch(BatchObservation(
+                names=self.names, acts=acts, arts=arts, writes=writes,
+                miss=np.asarray(decision.miss, bool),
+                version=np.asarray(decision.version, np.int64),
+                ledger_delta=decision.ledger_delta,
+                state_before=state_before,
+                state_after=np.asarray(self.decider.arrays.state,
+                                       np.int32),
+                ver_after=ver_after,
+                wire_delta=decision.wire_delta,
+                shard=self.shard, live=True, busy_s=busy_s,
+                route=self.decider.backend, queue_depth=queue_depth,
+                t_decide=t_decide, t_respond=now,
+                t_submits={req.agent: req.t_submit for req in batch},
+                latencies=latencies))
         if self._on_commit is not None:
             self._on_commit(self, {
                 "acts": acts, "arts": arts, "writes": writes,
@@ -559,32 +603,7 @@ class CoherenceBroker:
         return np.asarray(self.decider.arrays.version, np.int32)
 
     def stats(self) -> dict:
-        lat = np.asarray(self.latencies) if self.latencies else \
-            np.zeros(1)
-        led = self.ledger
-        out = {
-            "strategy": self.config.strategy,
-            "backend": self.decider.backend,
-            "n_actions": led.n_reads + led.n_writes,
-            "n_batches": self.n_batches,
-            "mean_batch": ((led.n_reads + led.n_writes)
-                           / max(self.n_batches, 1)),
-            "total_tokens": led.total_tokens,
-            "fetch_tokens": led.fetch_tokens,
-            "signal_tokens": led.signal_tokens,
-            "push_tokens": led.push_tokens,
-            "n_fetches": led.n_fetches,
-            "n_hits": led.n_hits,
-            "cache_hit_rate": led.n_hits / max(led.n_hits
-                                               + led.n_fetches, 1),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "decide_busy_s": self.decide_busy_s,
-        }
-        if self.chunks is not None:
-            out.update(self.wire)
-            out["bytes_savings_vs_full"] = 1.0 - (
-                self.wire["delta_bytes"]
-                / max(self.wire["full_bytes"], 1))
-            out["unique_chunks"] = self.chunks.n_unique_chunks
-        return out
+        """The unified stats mapping (``repro.obs.stats``): canonical
+        nested schema plus the legacy flat aliases as a deprecation
+        shim."""
+        return unified_stats(self)

@@ -45,6 +45,9 @@ import numpy as np
 
 from repro.content.chunks import BYTES_PER_TOKEN
 from repro.core.protocol import TokenLedger
+from repro.obs.stats import unified_stats
+from repro.obs.telemetry import Telemetry
+from repro.service.batching import resolve_decide_backend
 from repro.service.broker import (CoherenceBroker, InvariantViolation,
                                   ReadResult, WriteResult)
 from repro.service.trace import ServiceTrace
@@ -79,9 +82,12 @@ class HostL1Directory:
     def fill(self, artifact: str, version: int, content) -> None:
         self.entries[artifact] = L1Entry(int(version), tuple(content))
 
-    def invalidate(self, artifact: str) -> None:
+    def invalidate(self, artifact: str) -> bool:
+        """Drop the entry; True if one was actually held."""
         if self.entries.pop(artifact, None) is not None:
             self.n_invalidations += 1
+            return True
+        return False
 
     def check(self, artifact: str, authority_version: int) -> None:
         """Raise if a valid entry sits past the staleness bound - the
@@ -147,6 +153,18 @@ class ShardedCoherenceBroker:
         self._capture = config.service.capture_trace
         self.n_batches = 0
 
+        #: ONE telemetry plane shared by every shard: sub-brokers stamp
+        #: their own ``shard=k`` label into the same registry, so the
+        #: fleet-wide MESI counters aggregate without a collector.
+        self.telemetry: Optional[Telemetry] = None
+        if config.service.telemetry:
+            self.telemetry = Telemetry(
+                config.n_agents, strategy=config.core.strategy,
+                backend=resolve_decide_backend(config.acs_config(),
+                                               config.service.backend),
+                n_shards=self.n_shards,
+                n_hosts=config.topology.n_hosts)
+
         self.brokers = []
         for shard in range(self.n_shards):
             view = config.shard_view(shard)
@@ -163,7 +181,8 @@ class ShardedCoherenceBroker:
             self.brokers.append(CoherenceBroker(
                 view.broker_view(), sub_contents,
                 on_commit=functools.partial(self._commit, shard),
-                device=devices[shard]))
+                device=devices[shard],
+                telemetry=self.telemetry, shard=shard))
         self.brokers = tuple(self.brokers)
 
         self.l1 = tuple(
@@ -247,10 +266,14 @@ class ShardedCoherenceBroker:
             # delta never leaves the host, no cross-shard hop
             self.l1_wire["l1_fills"] += 1
             self.l1_wire["l1_bytes"] += nbytes
+            level = "l1"
         else:
             self.l1_wire["l2_fills"] += 1
             self.l1_wire["l2_bytes"] += nbytes
             host.fill(artifact, result.version, result.content)
+            level = "l2"
+        if self.telemetry is not None:
+            self.telemetry.record_l1_fill(host.host, level, nbytes)
 
     def _l1_on_commit(self, agent: int, artifact: str,
                       version: int) -> None:
@@ -258,7 +281,8 @@ class ShardedCoherenceBroker:
         artifact on EVERY host, then the writer's host adopts the
         committed copy (if it is still the authority's current one)."""
         for host in self.l1:
-            host.invalidate(artifact)
+            if host.invalidate(artifact) and self.telemetry is not None:
+                self.telemetry.record_l1_invalidation(host.host)
         broker = self.broker_of(artifact)
         local = broker.artifact_index(artifact)
         if int(broker.versions[local]) == int(version):
@@ -299,7 +323,9 @@ class ShardedCoherenceBroker:
                                commit["miss"], commit["version"],
                                commit["latencies"],
                                write_chunks=commit["write_chunks"],
-                               shard=shard)
+                               shard=shard,
+                               decide_s=commit["busy_s"],
+                               batch_size=int(np.asarray(acts).sum()))
 
     # --------------------------------------------------- assembled views
     def _assemble(self, attr: str, agent_axis: bool) -> np.ndarray:
@@ -370,42 +396,7 @@ class ShardedCoherenceBroker:
 
     # ----------------------------------------------------------- stats
     def stats(self) -> dict:
-        led = self.ledger
-        lat = np.concatenate(
-            [np.asarray(b.latencies) for b in self.brokers
-             if b.latencies]) if any(b.latencies for b in self.brokers) \
-            else np.zeros(1)
-        busy = self.decision_busy()
-        n_actions = led.n_reads + led.n_writes
-        out = {
-            "strategy": self.config.core.strategy,
-            "backend": self.brokers[0].decider.backend,
-            "n_shards": self.n_shards,
-            "n_hosts": self.config.topology.n_hosts,
-            "shard_artifacts": tuple(len(c) for c in self._shard_cols),
-            "n_actions": n_actions,
-            "n_batches": self.n_batches,
-            "mean_batch": n_actions / max(self.n_batches, 1),
-            "total_tokens": led.total_tokens,
-            "fetch_tokens": led.fetch_tokens,
-            "signal_tokens": led.signal_tokens,
-            "push_tokens": led.push_tokens,
-            "n_fetches": led.n_fetches,
-            "n_hits": led.n_hits,
-            "cache_hit_rate": led.n_hits / max(led.n_hits
-                                               + led.n_fetches, 1),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "p99_ms": float(np.percentile(lat, 99) * 1e3),
-            "decide_busy_s": sum(busy),
-            "decide_busy_max_s": max(busy),
-            "decisions_per_s": n_actions / max(max(busy), 1e-12),
-        }
-        out.update(self.l1_wire)
-        fills = self.l1_wire["l1_fills"] + self.l1_wire["l2_fills"]
-        out["l1_fill_rate"] = self.l1_wire["l1_fills"] / max(fills, 1)
-        if self.chunked:
-            wire = self.wire
-            out.update(wire)
-            out["bytes_savings_vs_full"] = 1.0 - (
-                wire["delta_bytes"] / max(wire["full_bytes"], 1))
-        return out
+        """The unified stats mapping (``repro.obs.stats``): canonical
+        nested schema plus the legacy flat aliases as a deprecation
+        shim (identical schema to the plain broker's)."""
+        return unified_stats(self)

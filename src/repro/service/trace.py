@@ -45,6 +45,18 @@ class StepRecord:
     #: broker).  Steps from different shards interleave in *global
     #: commit order* - the one serializable order the oracle replays.
     shard: int = -1
+    #: v4 telemetry stamps: decision-kernel wall time for this batch
+    #: and the cut batch size (requests decided together).  Defaults
+    #: are what v3-and-older traces load with; ``batch_size`` falls
+    #: back to ``len(agents)`` when unstamped (-1), so offline latency
+    #: reconstruction works on any trace vintage.
+    decide_s: float = 0.0
+    batch_size: int = -1
+
+    @property
+    def size(self) -> int:
+        """Batch size, robust to v3 traces (unstamped -> len(agents))."""
+        return self.batch_size if self.batch_size >= 0 else len(self.agents)
 
 
 @dataclasses.dataclass
@@ -80,7 +92,9 @@ class ServiceTrace:
     # -------------------------------------------------------- capture
     def append_step(self, acts, arts, writes, miss, version,
                     latencies: Optional[dict] = None,
-                    write_chunks=None, shard: int = -1) -> None:
+                    write_chunks=None, shard: int = -1,
+                    decide_s: float = 0.0,
+                    batch_size: Optional[int] = None) -> None:
         agents = tuple(int(a) for a in np.flatnonzero(np.asarray(acts)))
         chunks = ()
         if write_chunks is not None:
@@ -95,7 +109,10 @@ class ServiceTrace:
             version=tuple(int(version[a]) for a in agents),
             latency_s=tuple(float((latencies or {}).get(a, 0.0))
                             for a in agents),
-            chunks=chunks, shard=int(shard)))
+            chunks=chunks, shard=int(shard),
+            decide_s=float(decide_s),
+            batch_size=(len(agents) if batch_size is None
+                        else int(batch_size))))
 
     @property
     def n_steps(self) -> int:
@@ -144,11 +161,35 @@ class ServiceTrace:
         return oracle.Trace(acts=acts, arts=arts, writes=writes,
                             write_chunks=write_chunks)
 
+    # ----------------------------------------------- offline telemetry
+    def latency_report(self) -> dict:
+        """Reconstruct the service latency/decide histograms from the
+        trace alone (no live broker needed).  v4 traces carry per-step
+        decision wall time and batch size; v3-and-older traces yield
+        zeros for ``decide_*`` and ``len(agents)`` batch sizes."""
+        lat = np.asarray([x for s in self.steps for x in s.latency_s],
+                         float)
+        if lat.size == 0:
+            lat = np.zeros(1)
+        sizes = [s.size for s in self.steps]
+        decide = [s.decide_s for s in self.steps]
+        return {
+            "n_steps": self.n_steps,
+            "n_actions": self.n_actions,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "mean_batch": (sum(sizes) / max(len(sizes), 1)),
+            "max_batch": max(sizes, default=0),
+            "decide_s_total": float(sum(decide)),
+            "decide_s_max": float(max(decide, default=0.0)),
+        }
+
     # --------------------------------------------------- serialization
     def to_json(self) -> str:
         payload = dataclasses.asdict(self)
-        # v2: chunk_tokens + step chunks; v3: shard topology + step shard
-        payload["schema_version"] = 3
+        # v2: chunk_tokens + step chunks; v3: shard topology + step
+        # shard; v4: per-step decide_s + batch_size telemetry stamps
+        payload["schema_version"] = 4
         return json.dumps(payload, indent=2)
 
     @classmethod
@@ -163,7 +204,10 @@ class ServiceTrace:
         def record(s: dict) -> StepRecord:
             chunks = tuple(tuple(c) for c in s.pop("chunks", ()))
             shard = int(s.pop("shard", -1))
+            decide_s = float(s.pop("decide_s", 0.0))    # v3 traces
+            batch_size = int(s.pop("batch_size", -1))   # v3 traces
             return StepRecord(chunks=chunks, shard=shard,
+                              decide_s=decide_s, batch_size=batch_size,
                               **{k: tuple(v) for k, v in s.items()})
 
         steps = [record(s) for s in payload.pop("steps")]

@@ -407,7 +407,7 @@ class TestChunkedBroker:
         wire, stats = asyncio.run(_scripted_session(
             _broker_config(backend="scan")))
         assert 0 < wire["delta_bytes"] < wire["full_bytes"]
-        assert stats["bytes_savings_vs_full"] > 0
+        assert stats["wire"]["bytes_savings_vs_full"] > 0
 
     @pytest.mark.pallas
     def test_scan_and_pallas_routes_agree(self):

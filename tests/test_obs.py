@@ -1,0 +1,385 @@
+"""Observability tier: metrics registry, MESI perf counters, span
+tracing and the metrics-conformance oracle leg.
+
+Covers the load-bearing properties of ``repro.obs`` (see
+tests/README.md "Observability tier"):
+
+  * the registry is exact - counters are plain Python ints, label
+    cells never alias, snapshots round-trip through JSON and the
+    Prometheus rendering is parseable line-oriented text;
+  * metrics conformance - replaying the captured ``ServiceTrace``
+    through a fresh telemetry plane reproduces every replayable
+    counter bit-identically, for the plain broker AND the K-shard
+    plane, on every workload family; a white-box corruption of a
+    single live counter cell makes the oracle go red;
+  * span lifecycle under true concurrency - adversarial ping-pong
+    clients produce request + decide spans whose Chrome-trace JSON
+    round-trips with the documented schema;
+  * the unified stats schema and its deprecation shim, trace schema
+    v4 round-trips (v3 payloads load with defaults), the ``metrics``
+    TCP verb, and the jit/warmup compile log.
+
+Async tests run via ``asyncio.run`` inside plain pytest functions (no
+pytest-asyncio dependency).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.obs import (MetricsConformanceError, MetricsRegistry,
+                       SpanRecorder, check_metrics_conformance)
+from repro.obs import runtime as obs_runtime
+from repro.obs import stats as obs_stats
+from repro.service import (BrokerConfig, CoherenceBroker, CoherenceConfig,
+                           ServiceTrace, connect, drive_workload)
+from repro.sim import workloads
+
+pytestmark = pytest.mark.obs
+
+FAMILIES = tuple(workloads.FAMILIES)
+
+
+def _names(m: int) -> tuple:
+    return tuple(f"artifact-{d}" for d in range(m))
+
+
+def _config(n: int = 6, m: int = 4, tokens: int = 64, **kw) -> BrokerConfig:
+    return BrokerConfig(n_agents=n, artifacts=_names(m),
+                        artifact_tokens=tokens, **kw)
+
+
+def _workload(family: str, n: int = 6, m: int = 4, tokens: int = 64,
+              **kw):
+    return workloads.make(family, n_agents=n, n_artifacts=m,
+                          artifact_tokens=tokens, n_steps=8, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry.
+
+
+def test_counter_exact_and_labeled():
+    reg = MetricsRegistry()
+    c = reg.counter("coh_test_total", "help text")
+    c.inc(3, shard=0)
+    c.inc(shard=0)
+    c.inc(5, shard=1)
+    assert reg.counter_value("coh_test_total", shard=0) == 4
+    assert reg.counter_value("coh_test_total", shard=1) == 5
+    assert reg.counter_total("coh_test_total") == 9
+    assert isinstance(reg.counter_total("coh_test_total"), int)
+    # label order must not mint a second cell
+    c.inc(1, a=1, b=2)
+    c.inc(1, b=2, a=1)
+    assert reg.counter_value("coh_test_total", a=1, b=2) == 2
+    # get-or-create returns the same object; a kind clash is an error
+    assert reg.counter("coh_test_total") is c
+    with pytest.raises(TypeError):
+        reg.gauge("coh_test_total")
+
+
+def test_histogram_window_and_percentiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("coh_lat", window=8)
+    for v in range(100):
+        h.observe(float(v))
+    cell = h.cell()
+    assert cell.count == 100 and cell.sum == sum(range(100))
+    assert len(cell.ring) == 8          # bounded memory
+    assert cell.min == 0.0 and cell.max == 99.0
+    assert cell.percentile(50) >= 92.0  # window keeps the newest values
+
+
+def test_snapshot_and_prometheus_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("coh_a_total", "a").inc(7, shard=0)
+    reg.gauge("coh_g", "g").set(2.5)
+    reg.histogram("coh_h", "h").observe(1.0)
+    snap = json.loads(json.dumps(reg.snapshot()))
+    assert snap["counters"]["coh_a_total"]["values"][0]["value"] == 7
+    assert snap["gauges"]["coh_g"]["values"][0]["value"] == 2.5
+    assert snap["histograms"]["coh_h"]["values"][0]["count"] == 1
+    prom = reg.to_prometheus()
+    assert '# TYPE coh_a_total counter' in prom
+    assert 'coh_a_total{shard="0"} 7' in prom
+    for line in prom.splitlines():
+        assert line.startswith("#") or len(line.rsplit(" ", 1)) == 2
+
+
+def test_span_recorder_bounded():
+    rec = SpanRecorder(capacity=4)
+    for i in range(10):
+        rec.add(f"s{i}", "request", ts_s=float(i), dur_s=0.1,
+                pid=0, tid=i)
+    assert rec.n_recorded == 10         # exact count survives eviction
+    trace = rec.chrome_trace()
+    assert len(trace["traceEvents"]) == 4
+    ev = json.loads(rec.to_chrome_json())["traceEvents"][0]
+    assert ev["ph"] == "X" and {"name", "cat", "ts", "dur", "pid",
+                                "tid"} <= set(ev)
+
+
+# ---------------------------------------------------------------------------
+# Metrics conformance: live counters == trace replay, bit for bit.
+
+
+def test_metrics_conformance_all_families_plain():
+    async def run(family):
+        w = _workload(family)
+        async with CoherenceBroker(_config()) as broker:
+            await drive_workload(broker, w, 8, seed=11)
+            return check_metrics_conformance(broker, name=family)
+    for family in FAMILIES:
+        report = run_ = asyncio.run(run(family))
+        assert report["bit_exact"], (family, run_)
+        assert report["counters_compared"] >= 15
+        assert report["histograms_compared"] == 2
+
+
+@pytest.mark.sharded
+def test_metrics_conformance_all_families_sharded():
+    cfg = CoherenceConfig.make(6, _names(5), artifact_tokens=64,
+                               shards=4, hosts=2)
+
+    async def run(family):
+        w = _workload(family, m=5)
+        async with connect(cfg) as broker:
+            await drive_workload(broker, w, 8, seed=11)
+            return check_metrics_conformance(broker, name=family)
+    for family in FAMILIES:
+        report = asyncio.run(run(family))
+        assert report["bit_exact"], (family, report)
+        assert report["l1_fills_conserved"], (family, report)
+
+
+def test_metrics_corruption_goes_red():
+    """White-box: bump one live counter cell by one - the conformance
+    oracle must refuse to call the registry bit-exact."""
+    async def main():
+        w = _workload("uniform" if "uniform" in FAMILIES else
+                      FAMILIES[0])
+        async with CoherenceBroker(_config()) as broker:
+            await drive_workload(broker, w, 8, seed=3)
+            broker.telemetry.registry.counter(
+                "coh_fetch_tokens_total").inc(1, shard=0)
+            with pytest.raises(MetricsConformanceError):
+                check_metrics_conformance(broker)
+    asyncio.run(main())
+
+
+def test_conformance_requires_telemetry_and_capture():
+    async def main():
+        async with CoherenceBroker(_config(telemetry=False)) as broker:
+            await broker.read(0, "artifact-0")
+            assert broker.telemetry is None
+            with pytest.raises(ValueError):
+                check_metrics_conformance(broker)
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# MESI perf counters + spans under adversarial concurrency.
+
+
+def test_pingpong_spans_and_detectors():
+    """Two writers flip one artifact while readers hammer it: the
+    ping-pong detector fires, every request gets a span, and the
+    Chrome trace round-trips."""
+    async def main():
+        async with CoherenceBroker(_config(n=6, m=2)) as broker:
+            for _ in range(6):
+                await asyncio.gather(
+                    broker.write(0, "artifact-0"),
+                    broker.write(1, "artifact-0"),
+                    *(broker.read(a, "artifact-0") for a in (2, 3, 4)))
+            # sequential tail: agent 5's fill is invalidated by the
+            # next write in a LATER batch, so the batch-granular
+            # valid->I transition becomes observable
+            await broker.read(5, "artifact-0")
+            await broker.write(0, "artifact-0")
+            return broker
+    broker = asyncio.run(main())
+    tel = broker.telemetry
+    reg = tel.registry
+    assert reg.counter_total("coh_pingpong_alternations_total") > 0
+    assert reg.counter_total("coh_invalidation_events_total") > 0
+    n_reqs = broker.ledger.n_reads + broker.ledger.n_writes
+    trace = tel.chrome_trace()
+    reqs = [e for e in trace["traceEvents"] if e["cat"] == "request"]
+    decides = [e for e in trace["traceEvents"] if e["cat"] == "batch"]
+    assert len(reqs) == n_reqs
+    assert len(decides) == broker.n_batches
+    for ev in reqs:
+        assert ev["args"]["queue_s"] >= 0.0
+        assert ev["args"]["decide_s"] >= 0.0
+    json.loads(tel.spans.to_chrome_json())    # schema is valid JSON
+    assert check_metrics_conformance(broker)["bit_exact"]
+
+
+def test_staleness_counter_matches_versions():
+    """Sequential requests are always served the authority head, so
+    staleness-at-serve is exactly 0 for every read; one observation
+    per served read either way."""
+    async def main():
+        async with CoherenceBroker(_config(n=3, m=1)) as broker:
+            await broker.read(0, "artifact-0")
+            for _ in range(3):
+                await broker.write(1, "artifact-0")
+            await broker.read(0, "artifact-0")
+            return broker.telemetry.registry.histogram_totals(
+                "coh_staleness_at_serve")
+    totals = asyncio.run(main())
+    (count, total), = totals.values()
+    assert count == 2 and total == 0
+
+
+# ---------------------------------------------------------------------------
+# Unified stats schema + deprecation shim.
+
+
+def test_stats_nested_schema():
+    async def main():
+        async with CoherenceBroker(_config()) as broker:
+            await broker.read(0, "artifact-0")
+            await broker.write(1, "artifact-0")
+            return broker.stats()
+    stats = asyncio.run(main())
+    assert stats["schema_version"] == 1
+    for section in ("topology", "decision", "ledger", "latency",
+                    "telemetry", "mesi"):
+        assert section in stats, section
+    assert stats["decision"]["n_actions"] == 2
+    assert stats["decision"]["n_batches"] == 2
+    assert stats["ledger"]["n_reads"] == 1
+    # the protocol's state plane is S/I-valued (writers retain S)
+    assert stats["mesi"]["occupancy"]["S"] >= 1
+    assert stats["mesi"]["occupancy"]["I"] >= 1
+    assert stats["mesi"]["invalidation_events"] >= 1
+
+
+def test_stats_legacy_aliases_warn_once():
+    async def main():
+        async with CoherenceBroker(_config()) as broker:
+            await broker.read(0, "artifact-0")
+            return broker.stats()
+    stats = asyncio.run(main())
+    obs_stats._warned.discard("n_actions")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert stats["n_actions"] == 1      # legacy flat alias
+        assert stats["n_actions"] == 1      # second access: no new warn
+        json.dumps(stats)                   # serialization never warns
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1
+
+
+# ---------------------------------------------------------------------------
+# Trace schema v4.
+
+
+def test_trace_v4_round_trip_and_v3_defaults():
+    async def main():
+        async with CoherenceBroker(_config()) as broker:
+            await asyncio.gather(*(
+                broker.read(a, "artifact-1") for a in range(6)))
+            await broker.write(0, "artifact-1")
+            return broker.trace
+    trace = asyncio.run(main())
+    payload = json.loads(trace.to_json())
+    assert payload["schema_version"] == 4
+    assert payload["steps"][0]["batch_size"] == 6
+    assert payload["steps"][0]["decide_s"] > 0.0
+    back = ServiceTrace.from_json(trace.to_json())
+    assert [s.decide_s for s in back.steps] == \
+        [s.decide_s for s in trace.steps]
+    rep = back.latency_report()
+    assert rep["n_steps"] == 2 and rep["max_batch"] == 6
+    assert rep["decide_s_total"] > 0.0
+    # a v3 payload (no per-step decide fields) loads with defaults
+    for step in payload["steps"]:
+        del step["decide_s"], step["batch_size"]
+    payload["schema_version"] = 3
+    v3 = ServiceTrace.from_json(json.dumps(payload))
+    assert v3.steps[0].decide_s == 0.0
+    assert v3.steps[0].batch_size == -1
+    assert v3.steps[0].size == 6            # falls back to len(agents)
+
+
+# ---------------------------------------------------------------------------
+# TCP frontend `metrics` verb + launcher --verify-metrics.
+
+
+def test_tcp_metrics_verb():
+    from repro.launch.service import serve_tcp
+
+    async def rpc(reader, writer, obj):
+        writer.write(json.dumps(obj).encode() + b"\n")
+        await writer.drain()
+        return json.loads(await reader.readline())
+
+    async def main():
+        async with CoherenceBroker(_config(n=4, m=2, tokens=16)) as broker:
+            server = await serve_tcp(broker, "127.0.0.1", 0)
+            port = server.sockets[0].getsockname()[1]
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", port)
+            await rpc(reader, writer, {"op": "read", "agent": 0,
+                                       "artifact": "artifact-0"})
+            m = await rpc(reader, writer, {"op": "metrics"})
+            assert m["ok"]
+            assert "coh_fetch_tokens_total" in m["prometheus"]
+            assert m["snapshot"]["counters"]["coh_reads_total"][
+                "values"][0]["value"] == 1
+            writer.close()
+            server.close()
+            await server.wait_closed()
+
+    async def disabled():
+        cfg = _config(n=4, m=2, tokens=16, telemetry=False)
+        async with CoherenceBroker(cfg) as broker:
+            server = await serve_tcp(broker, "127.0.0.1", 0)
+            port = server.sockets[0].getsockname()[1]
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", port)
+            m = await rpc(reader, writer, {"op": "metrics"})
+            assert not m["ok"] and "telemetry" in m["error"]
+            writer.close()
+            server.close()
+            await server.wait_closed()
+    asyncio.run(main())
+    asyncio.run(disabled())
+
+
+def test_launch_verify_metrics_smoke():
+    from repro.launch import service as launch_service
+    summary = launch_service.main([
+        "--family", "uniform", "--clients", "5", "--artifacts", "3",
+        "--artifact-tokens", "32", "--rounds", "5", "--verify-metrics"])
+    report = summary["metrics_conformance"]
+    assert report["bit_exact"]
+    assert report["counters_compared"] >= 15
+
+
+# ---------------------------------------------------------------------------
+# Compile/warmup instrumentation.
+
+
+def test_compile_log_records_fresh_trace():
+    before = obs_runtime.compile_count("scan")
+
+    async def main():
+        # a shape no other test uses -> guaranteed fresh jit trace
+        cfg = _config(n=11, m=3, tokens=48)
+        async with CoherenceBroker(cfg) as broker:
+            await broker.read(0, "artifact-0")
+    asyncio.run(main())
+    assert obs_runtime.compile_count("scan") >= before + 1
+    warm = [e for e in obs_runtime.compile_events()
+            if e["kind"] == "warmup" and "agents=11" in e["label"]]
+    assert warm and warm[-1]["dur_s"] > 0.0
